@@ -1,0 +1,79 @@
+"""E5 — Table IV: ULEEN vs Bloom WiSARD on the nine datasets (synthetic
+stand-ins with the real (features, classes, skew) signatures).
+
+Baseline = Bloom WiSARD as published: one-shot, Murmur double hashing,
+binary Bloom filters, NO bleaching. ULEEN = multi-shot ensemble + bleach-
+style binarisation + 30% pruning. Claims: ULEEN more accurate AND smaller
+on every set; the skewed 'shuttle' saturates the baseline (paper §V-E).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, run_multi_shot, run_one_shot, spec_for
+from repro.core.encoding import fit_gaussian_thermometer
+from repro.data.synth import UCI_SUITE, make_uci_like
+
+# (bits/input, [(inputs, log2_e), ...]) per dataset, sized like Table IV
+GEOM = {
+    "mnist":    (2, [(12, 6), (20, 6)]),
+    "ecoli":    (8, [(8, 5)]),
+    "iris":     (8, [(8, 4)]),
+    "letter":   (8, [(12, 6), (16, 6)]),
+    "satimage": (6, [(12, 6)]),
+    "shuttle":  (8, [(8, 5)]),
+    "vehicle":  (8, [(10, 5)]),
+    "vowel":    (8, [(8, 5)]),
+    "wine":     (8, [(8, 4)]),
+}
+
+
+def main() -> dict:
+    out = {}
+    wins = 0
+    for name in UCI_SUITE:
+        ds = make_uci_like(jax.random.PRNGKey(11), name)
+        bits, subs = GEOM[name]
+        enc = fit_gaussian_thermometer(ds.x_train, bits)
+        btr, bte = enc.encode(ds.x_train), enc.encode(ds.x_test)
+        m = ds.num_classes
+
+        def spec_of(sub_list):
+            s = spec_for(btr.shape[1], sub_list, bits)
+            import dataclasses
+            return dataclasses.replace(s, num_classes=m)
+
+        # baseline: Bloom WiSARD (single model, murmur, no bleach)
+        base_spec = spec_of(subs[:1])
+        acc_b, *_ = run_one_shot(base_spec, btr, ds.y_train, bte, ds.y_test,
+                                 hash_family="murmur", bleach=False)
+        size_b = base_spec.size_kib()
+
+        # ULEEN: multi-shot ensemble + prune. Tiny datasets get more
+        # epochs — they cost nothing and the STE needs enough steps for
+        # entries to cross zero (same total-step budget across sets).
+        epochs = int(min(60, max(12, 40000 // max(1, ds.x_train.shape[0]))))
+        ul_spec = spec_of(subs)
+        res, _ = run_multi_shot(ul_spec, btr, ds.y_train, bte, ds.y_test,
+                                epochs=epochs, prune=0.3)
+        acc_u = res.val_accuracy
+        size_u = ul_spec.size_kib(res.params.masks)
+
+        emit(f"tab4.{name}.bloomwisard_acc", f"{100 * acc_b:.1f}",
+             f"size={size_b:.2f}KiB")
+        emit(f"tab4.{name}.uleen_acc", f"{100 * acc_u:.1f}",
+             f"size={size_u:.2f}KiB")
+        wins += acc_u >= acc_b
+        out[name] = (acc_b, size_b, acc_u, size_u)
+
+    emit("tab4.uleen_wins", f"{wins}/9", "paper: 9/9 more accurate")
+    # the saturation claim on the skewed set
+    acc_b, _, acc_u, _ = out["shuttle"]
+    emit("tab4.shuttle_err_reduction",
+         f"{100 * (1 - (1 - acc_u) / max(1e-9, 1 - acc_b)):.0f}%",
+         "paper: ~99% (bleaching rescues the saturated majority class)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

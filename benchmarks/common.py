@@ -1,0 +1,86 @@
+"""Shared benchmark infrastructure: datasets, training wrappers, CSV."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import one_shot
+from repro.core.encoding import (fit_gaussian_thermometer,
+                                 fit_linear_thermometer, fit_mean_binarizer)
+from repro.core.model import (SubmodelSpec, UleenSpec, compute_hashes,
+                              init_params, init_static)
+from repro.core.multi_shot import MultiShotConfig, train_multi_shot
+from repro.core.pruning import prune_and_finetune
+from repro.data.synth import make_mnist_like
+
+HW = 16          # benchmark image side (256 px mnist-like; CPU-sized)
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    print(f"{name},{value},{derived}", flush=True)
+
+
+@functools.lru_cache(maxsize=2)
+def bench_dataset(hw: int = HW, n_train: int = 4000, n_test: int = 1000):
+    return make_mnist_like(jax.random.PRNGKey(0), n_train, n_test, hw=hw)
+
+
+def encode(ds, bits: int, kind: str = "gaussian"):
+    fit = {"gaussian": fit_gaussian_thermometer,
+           "linear": fit_linear_thermometer}.get(kind)
+    enc = fit(ds.x_train, bits) if fit else fit_mean_binarizer(ds.x_train)
+    return enc, enc.encode(ds.x_train), enc.encode(ds.x_test)
+
+
+def spec_for(total_bits: int, subs, bits_per_input: int) -> UleenSpec:
+    return UleenSpec(num_classes=10, total_bits=total_bits,
+                     submodels=tuple(SubmodelSpec(*s) for s in subs),
+                     bits_per_input=bits_per_input)
+
+
+def run_one_shot(spec, bits_tr, y_tr, bits_te, y_te, *, seed=1,
+                 hash_family="h3", bleach=True):
+    statics = init_static(jax.random.PRNGKey(seed), spec)
+    model = one_shot.train_one_shot(spec, statics, bits_tr, y_tr, bits_te,
+                                    y_te, hash_family=hash_family,
+                                    search_steps=10 if bleach else 0)
+    if not bleach:
+        model = model._replace(bleach=jnp.asarray(1, jnp.int32))
+    acc = one_shot.evaluate_one_shot(spec, statics, model, bits_te, y_te,
+                                     hash_family=hash_family)
+    return acc, statics, model
+
+
+def run_multi_shot(spec, bits_tr, y_tr, bits_te, y_te, *, seed=1,
+                   epochs=12, lr=1e-2, prune=0.0):
+    statics = init_static(jax.random.PRNGKey(seed), spec)
+    params = init_params(jax.random.PRNGKey(seed + 1), spec, init_scale=0.1)
+    res = train_multi_shot(spec, statics, params, bits_tr, y_tr, bits_te,
+                           y_te, MultiShotConfig(epochs=epochs,
+                                                 batch_size=128,
+                                                 learning_rate=lr))
+    if prune > 0:
+        res = prune_and_finetune(
+            spec, statics, res.params, bits_tr, y_tr, bits_te, y_te,
+            ratio=prune, finetune=MultiShotConfig(epochs=max(2, epochs // 3),
+                                                  batch_size=128,
+                                                  learning_rate=lr / 2))
+    return res, statics
+
+
+def timeit(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

@@ -1,0 +1,48 @@
+"""E4 — Table III / Fig. 12: ASIC comparison vs Bit Fusion (analytical).
+
+Reproduces the paper's 45nm rows from structural counts (throughput exact:
+bus-bound II at 500 MHz / 192-bit interface; power/area calibrated), then
+the headline ratios against the published Bit Fusion design points.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import hwmodel
+
+# Published rows (paper Table III): kIPS, W, nJ/inf (b=16), mm^2, acc%
+PAPER_ULN = {"uln-s": (55556, 0.84, 17.5, 0.61),
+             "uln-m": (55556, 2.58, 57.1, 2.09),
+             "uln-l": (38462, 6.23, 195.5, 5.22)}
+BITFUSION = {"bf8": (2.0, 0.26, 129731, 0.60),
+             "bf16": (7.1, 0.81, 114914, 1.59),
+             "bf32": (19.1, 1.79, 93589, 1.65)}
+
+
+def main() -> dict:
+    plats = hwmodel.calibrated_platforms()
+    rows = {}
+    for name, counts in [("uln-s", hwmodel.ULN_S), ("uln-m", hwmodel.ULN_M),
+                         ("uln-l", hwmodel.ULN_L)]:
+        r = hwmodel.evaluate_design(counts, plats["asic"])
+        rows[name] = r
+        kips_p, w_p, nj_p, mm2_p = PAPER_ULN[name]
+        emit(f"asic.{name}.xput_kips", f"{r.throughput_kips:.0f}",
+             f"paper={kips_p}")
+        emit(f"asic.{name}.power_w", f"{r.power_w:.2f}", f"paper={w_p}")
+        emit(f"asic.{name}.nj_per_inf", f"{r.energy_uj_steady * 1e3:.1f}",
+             f"paper={nj_p}")
+        emit(f"asic.{name}.area_mm2", f"{r.area_mm2:.2f}", f"paper={mm2_p}")
+        assert abs(r.throughput_kips - kips_p) / kips_p < 0.02
+
+    # headline: ULN-L vs Bit Fusion — paper: 479-663x energy, 2014-19549x xput
+    r = rows["uln-l"]
+    for bf, (kips, w, nj, mm2) in BITFUSION.items():
+        emit(f"asic.uln-l_vs_{bf}.xput_ratio",
+             f"{r.throughput_kips / kips:.0f}", "paper 2014-19549x")
+        emit(f"asic.uln-l_vs_{bf}.energy_ratio",
+             f"{nj / (r.energy_uj_steady * 1e3):.0f}", "paper 479-663x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""E3 — Table II / Fig. 11: FPGA comparison vs FINN (analytical model).
+
+The paper's FPGA numbers are reproduced from structural counts through the
+calibrated accelerator model (hwmodel.py): the bus-bound initiation
+interval reproduces throughput EXACTLY; power calibration recovers the
+published per-op energies. FINN rows are the paper's published
+measurements, for the energy/latency-ratio claims.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import hwmodel
+
+# Published FINN rows (paper Table II): name -> (lat us, kIPS, W, uJ/inf b=inf)
+FINN = {"sfc": (0.31, 12361, 7.3, 0.591),
+        "mfc": (None, 6238, 11.3, 1.811),
+        "lfc": (2.44, 1561, 8.8, 5.637)}
+PAPER_ULN = {"uln-s": (0.21, 14286, 1.1, 0.077),
+             "uln-m": (0.29, 14286, 3.1, 0.214),
+             "uln-l": (0.94, 4070, 3.4, 0.826)}
+
+
+def main() -> dict:
+    plats = hwmodel.calibrated_platforms()
+    rows = {}
+    for name, counts, plat in [("uln-s", hwmodel.ULN_S, plats["fpga"]),
+                               ("uln-m", hwmodel.ULN_M, plats["fpga"]),
+                               ("uln-l", hwmodel.ULN_L, plats["fpga@85"])]:
+        r = hwmodel.evaluate_design(counts, plat)
+        rows[name] = r
+        lat_p, kips_p, w_p, uj_p = PAPER_ULN[name]
+        emit(f"fpga.{name}.xput_kips", f"{r.throughput_kips:.0f}",
+             f"paper={kips_p} err={abs(r.throughput_kips - kips_p) / kips_p:.1%}")
+        emit(f"fpga.{name}.latency_us", f"{r.latency_us:.3f}",
+             f"paper={lat_p}")
+        emit(f"fpga.{name}.power_w", f"{r.power_w:.2f}", f"paper={w_p}")
+        emit(f"fpga.{name}.uj_per_inf", f"{r.energy_uj_steady:.3f}",
+             f"paper={uj_p}")
+        assert abs(r.throughput_kips - kips_p) / kips_p < 0.02, \
+            f"bus-bound throughput must match the paper ({name})"
+
+    # headline ratios vs FINN (paper: 1.2-2.6x xput, 6.8-8.5x energy)
+    for uln, finn in [("uln-s", "sfc"), ("uln-m", "mfc"), ("uln-l", "lfc")]:
+        r = rows[uln]
+        _, kips_f, _, uj_f = FINN[finn]
+        emit(f"fpga.{uln}_vs_{finn}.xput_ratio",
+             f"{r.throughput_kips / kips_f:.2f}", "paper range 1.2-2.6x")
+        emit(f"fpga.{uln}_vs_{finn}.energy_ratio",
+             f"{uj_f / r.energy_uj_steady:.2f}", "paper range 6.8-8.5x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

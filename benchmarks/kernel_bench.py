@@ -1,0 +1,70 @@
+"""E8 — kernel microbenchmarks (ours; no paper table).
+
+CPU wall-times compare the jnp oracle to the interpret-mode kernel only
+for correctness-path costs; the structural numbers that matter for the
+TPU target (VMEM working set per block, MXU-aligned dims, arithmetic
+intensity) are derived analytically per kernel and reported alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ref
+from repro.kernels.fused_wnn import fused_wnn
+from repro.kernels.h3_hash import h3_hash_tiled
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    b, n_f, n, m, e, k = 256, 131, 12, 10, 64, 2   # ULN-S SM0-like
+    tuples = jax.random.bernoulli(ks[0], 0.5, (b, n_f, n)).astype(jnp.int8)
+    params = jax.random.randint(ks[1], (k, n), 0, e, dtype=jnp.int32)
+    table = jax.random.bernoulli(ks[2], 0.3, (m, n_f, e)).astype(jnp.int8)
+    mask = jnp.ones((m, n_f), jnp.int8)
+    bias = jnp.zeros((m,), jnp.int32)
+
+    jit_ref = jax.jit(ref.fused_wnn_ref)
+    us = timeit(jit_ref, tuples, params, table, mask, bias, iters=10)
+    emit("kernel.fused_wnn.oracle_us", f"{us:.0f}", f"B={b} Nf={n_f}")
+
+    # fused kernel structural numbers for the TPU target
+    block_b, block_f = 128, 64
+    vmem = (block_b * block_f * n            # tuples int8
+            + m * block_f * e                # table int8
+            + block_b * block_f * e          # one-hot int8
+            + block_b * m * 4)               # accumulator int32
+    flops = 2 * block_b * m * block_f * e * k     # one-hot matmuls
+    emit("kernel.fused_wnn.vmem_kib_per_block", f"{vmem / 1024:.0f}",
+         f"block=({block_b},{block_f}) fits 16MiB VMEM: {vmem < 16 * 2**20}")
+    emit("kernel.fused_wnn.arith_intensity",
+         f"{flops / max(1, vmem):.1f}",
+         "flops per VMEM byte; MXU-aligned dims (E=64, M pad 128)")
+
+    jit_h3 = jax.jit(ref.h3_hash_ref)
+    us = timeit(jit_h3, tuples, params, iters=10)
+    emit("kernel.h3.oracle_us", f"{us:.0f}", f"{b * n_f * k} hashes")
+    emit("kernel.h3.hashes_per_us", f"{b * n_f * k / max(us, 1e-9):.0f}",
+         "CPU oracle rate")
+
+    # flash attention: oracle vs chunked-XLA (the TPU kernel's CPU stand-in)
+    from repro.models.layers import chunked_attention
+    q = jax.random.normal(ks[0], (1, 8, 512, 64))
+    kk = jax.random.normal(ks[1], (1, 8, 512, 64))
+    v = jax.random.normal(ks[2], (1, 8, 512, 64))
+    naive = jax.jit(lambda q, k, v: ref.attention_ref(
+        q.reshape(8, 512, 64), k.reshape(8, 512, 64),
+        v.reshape(8, 512, 64), causal=True))
+    us_naive = timeit(naive, q, kk, v, iters=5)
+    chunked = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, chunk=128))
+    us_chunk = timeit(chunked, q, kk, v, iters=5)
+    emit("kernel.attention.naive_us", f"{us_naive:.0f}", "S=512 full S^2")
+    emit("kernel.attention.chunked_us", f"{us_chunk:.0f}",
+         f"streaming-softmax; ratio {us_chunk / us_naive:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""E2 — Table I: the selected ULEEN model zoo (ULN-S/M/L), CPU-scaled.
+
+Same structure as the paper's table — per-submodel accuracy well below the
+ensemble accuracy (weak classifiers combine), size from surviving
+filters × entries. Submodel geometry mirrors Table I with entries scaled
+to the 256-px synthetic task.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (bench_dataset, emit, encode, run_multi_shot,
+                               spec_for)
+from repro.core.model import compute_hashes, forward
+import jax.numpy as jnp
+
+ZOO = {
+    # name: (bits/input, [(inputs, log2_entries), ...], prune)
+    "uln-s": (2, [(12, 6), (16, 6), (20, 6)], 0.3),
+    "uln-m": (3, [(12, 6), (16, 7), (20, 8), (28, 8)], 0.3),
+    "uln-l": (4, [(12, 6), (16, 7), (20, 7), (24, 8), (28, 8), (32, 9)],
+              0.3),
+}
+
+
+def main() -> dict:
+    ds = bench_dataset()
+    out = {}
+    prev_acc = 0.0
+    for name, (bits, subs, prune) in ZOO.items():
+        enc, btr, bte = encode(ds, bits, "gaussian")
+        spec = spec_for(btr.shape[1], subs, bits)
+        res, statics = run_multi_shot(spec, btr, ds.y_train, bte, ds.y_test,
+                                      epochs=14, prune=prune)
+        size = spec.size_kib(res.params.masks)
+        emit(f"zoo.{name}.acc_pct", f"{100 * res.val_accuracy:.2f}",
+             f"size={size:.1f}KiB subs={len(subs)} bits={bits}")
+
+        # per-submodel accuracies (paper: individual rows of Table I)
+        h = compute_hashes(spec, statics, bte)
+        for i in range(len(subs)):
+            solo = spec_for(btr.shape[1], [subs[i]], bits)
+            scores = forward(
+                solo,
+                res.params._replace(tables=(res.params.tables[i],),
+                                    masks=(res.params.masks[i],)),
+                (h[i],), train=False)
+            acc_i = float(jnp.mean(jnp.argmax(scores, -1) == ds.y_test))
+            emit(f"zoo.{name}.sm{i}.acc_pct", f"{100 * acc_i:.2f}",
+                 f"n={subs[i][0]} e=2^{subs[i][1]}")
+            assert acc_i <= res.val_accuracy + 0.02, \
+                "ensemble must not lose to its own submodel"
+        out[name] = (res, statics, spec, size)
+        prev_acc = res.val_accuracy
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""E7 — Fig. 14: one-shot hyperparameter sweep.
+
+Sweeps thermometer bits, entries/filter and inputs/filter with the
+one-shot rule; reproduces the paper's findings of diminishing returns in
+bits and entries, and roughly log-linear accuracy in model size.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_dataset, emit, encode, run_one_shot, \
+    spec_for
+
+BITS = (1, 2, 4)
+ENTRIES = (5, 7, 9)          # log2: 32, 128, 512
+INPUTS = (12, 20, 28)
+
+
+def main() -> list:
+    ds = bench_dataset()
+    rows = []
+    best_at_bits = {}
+    best_at_entries = {}
+    for bits in BITS:
+        enc, btr, bte = encode(ds, bits, "gaussian")
+        for e in ENTRIES:
+            for n in INPUTS:
+                spec = spec_for(btr.shape[1], [(n, e)], bits)
+                acc, *_ = run_one_shot(spec, btr, ds.y_train, bte,
+                                       ds.y_test)
+                size = spec.size_kib()
+                rows.append((bits, e, n, size, acc))
+                best_at_bits[bits] = max(best_at_bits.get(bits, 0), acc)
+                best_at_entries[e] = max(best_at_entries.get(e, 0), acc)
+                emit(f"oneshot.b{bits}.e{1 << e}.n{n}.acc_pct",
+                     f"{100 * acc:.2f}", f"size={size:.1f}KiB")
+    # diminishing returns claims
+    for key, best in (("bits", best_at_bits), ("entries", best_at_entries)):
+        ks = sorted(best)
+        gains = [best[ks[i + 1]] - best[ks[i]] for i in range(len(ks) - 1)]
+        emit(f"oneshot.{key}_gains",
+             "/".join(f"{g:+.3f}" for g in gains),
+             "diminishing returns expected")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""E6 — Fig. 13: pruned size vs error.
+
+Paper claims: ~0-30% pruning ≈ free, gradual to ~80%, rapid degradation
+past it. One base model, pruned at each ratio with a short fine-tune.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (bench_dataset, emit, encode, run_multi_shot,
+                               spec_for)
+from repro.core.multi_shot import MultiShotConfig
+from repro.core.pruning import prune_and_finetune
+
+RATIOS = (0.0, 0.1, 0.3, 0.5, 0.7, 0.9)
+
+
+def main() -> list:
+    ds = bench_dataset()
+    enc, btr, bte = encode(ds, 2, "gaussian")
+    spec = spec_for(btr.shape[1], [(12, 6), (16, 6), (20, 6)], 2)
+    base, statics = run_multi_shot(spec, btr, ds.y_train, bte, ds.y_test,
+                                   epochs=14)
+    rows = []
+    for ratio in RATIOS:
+        if ratio == 0.0:
+            res, size = base, spec.size_kib()
+        else:
+            res = prune_and_finetune(
+                spec, statics, base.params, btr, ds.y_train, bte, ds.y_test,
+                ratio=ratio,
+                finetune=MultiShotConfig(epochs=4, batch_size=128,
+                                         learning_rate=5e-3))
+            size = spec.size_kib(res.params.masks)
+        err = 100 * (1 - res.val_accuracy)
+        rows.append((ratio, size, err))
+        emit(f"prune.r{int(ratio * 100):02d}.err_pct", f"{err:.2f}",
+             f"size={size:.1f}KiB")
+    # claims: 30% ~ free; 90% much worse than 30%
+    err0 = rows[0][2]
+    err30 = dict((r, e) for r, _, e in rows)[0.3]
+    err90 = dict((r, e) for r, _, e in rows)[0.9]
+    assert err30 <= err0 + 3.0, "30% pruning should be nearly free"
+    assert err90 > err30, "90% pruning must hurt"
+    emit("prune.claims", "ok", f"err@0={err0:.1f} @30={err30:.1f} "
+         f"@90={err90:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

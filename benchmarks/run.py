@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name]
+
+Emits ``name,value,derived`` CSV lines per measurement plus a per-module
+wall-time summary. The dry-run/roofline tables (E9/E10) are produced by
+``repro.launch.sweep`` + ``repro.launch.report`` (they need the 512-device
+placeholder backend and run as separate processes).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHMARKS = [
+    ("ablation_ladder", "Fig.10 iterative improvements"),
+    ("model_zoo", "Table I model zoo"),
+    ("hw_fpga", "Table II FPGA vs FINN"),
+    ("hw_asic", "Table III ASIC vs Bit Fusion"),
+    ("bloom_wisard_compare", "Table IV vs Bloom WiSARD"),
+    ("pruning_sweep", "Fig.13 pruning"),
+    ("oneshot_sweep", "Fig.14 one-shot sweep"),
+    ("kernel_bench", "kernel microbench"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    failures = []
+    t_all = time.time()
+    for name, desc in BENCHMARKS:
+        if args.only and args.only != name:
+            continue
+        print(f"# === {name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"benchmark.{name}.wall_s,{time.time() - t0:.1f},ok",
+                  flush=True)
+        except Exception as e:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"benchmark.{name}.wall_s,{time.time() - t0:.1f},"
+                  f"FAILED {type(e).__name__}", flush=True)
+    print(f"# total wall: {time.time() - t_all:.0f}s; "
+          f"failures: {failures or 'none'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

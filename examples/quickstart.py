@@ -1,0 +1,71 @@
+"""Quickstart: train a ULEEN ensemble end-to-end and export it.
+
+The paper's full pipeline (Fig. 7b) in ~60 lines of public API:
+encode -> multi-shot STE training -> prune 30% + fine-tune -> binarize ->
+export a deployable bit-packed artifact -> estimate edge hardware cost.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import export, hwmodel, one_shot
+from repro.core.encoding import fit_gaussian_thermometer
+from repro.core.model import SubmodelSpec, UleenSpec, init_params, init_static
+from repro.core.multi_shot import MultiShotConfig, train_multi_shot
+from repro.core.pruning import prune_and_finetune
+from repro.data.synth import make_mnist_like
+
+
+def main():
+    # 1. data (synthetic MNIST stand-in; offline container) + encoding
+    ds = make_mnist_like(jax.random.PRNGKey(0), n_train=4000, n_test=1000,
+                         hw=16)
+    enc = fit_gaussian_thermometer(ds.x_train, bits=2)
+    bits_tr, bits_te = enc.encode(ds.x_train), enc.encode(ds.x_test)
+    print(f"data: {ds.x_train.shape} -> {bits_tr.shape[1]} thermometer bits")
+
+    # 2. model: additive ensemble of three Bloom-filter WiSARD submodels
+    spec = UleenSpec(num_classes=10, total_bits=bits_tr.shape[1],
+                     submodels=(SubmodelSpec(12, 6), SubmodelSpec(16, 6),
+                                SubmodelSpec(20, 6)),
+                     bits_per_input=2)
+    statics = init_static(jax.random.PRNGKey(1), spec)
+
+    # 3. one-shot baseline (counting Bloom + bleaching), then multi-shot STE
+    osm = one_shot.train_one_shot(spec, statics, bits_tr, ds.y_train,
+                                  bits_te, ds.y_test)
+    acc_os = one_shot.evaluate_one_shot(spec, statics, osm, bits_te,
+                                        ds.y_test)
+    print(f"one-shot + bleach(b={int(osm.bleach)}): {acc_os:.1%}")
+
+    params = init_params(jax.random.PRNGKey(2), spec, init_scale=0.1)
+    res = train_multi_shot(spec, statics, params, bits_tr, ds.y_train,
+                           bits_te, ds.y_test,
+                           MultiShotConfig(epochs=15, batch_size=128,
+                                           learning_rate=1e-2,
+                                           verbose=True))
+    print(f"multi-shot: {res.val_accuracy:.1%}")
+
+    # 4. prune 30% + fine-tune, binarize, export
+    pruned = prune_and_finetune(spec, statics, res.params, bits_tr,
+                                ds.y_train, bits_te, ds.y_test, ratio=0.3,
+                                finetune=MultiShotConfig(epochs=4,
+                                                         batch_size=128,
+                                                         learning_rate=5e-3))
+    art = export.export_model(spec, statics, pruned.params)
+    export.save(art, "/tmp/uleen_quickstart.npz")
+    print(f"pruned: {pruned.val_accuracy:.1%} at {art.size_kib:.1f} KiB "
+          f"(full: {spec.size_kib():.1f} KiB) -> /tmp/uleen_quickstart.npz")
+
+    # 5. edge-hardware cost (calibrated against the paper's design points)
+    counts = hwmodel.counts_from_artifact(art)
+    plats = hwmodel.calibrated_platforms()
+    for name in ("fpga", "asic"):
+        r = hwmodel.evaluate_design(counts, plats[name])
+        print(f"{name}: {r.throughput_kips:,.0f} kIPS, "
+              f"{r.latency_us:.3f} us latency, "
+              f"{r.energy_uj_steady * 1000:.1f} nJ/inference")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Batched serving example: prefill + decode over every cache family.
+
+Spins up three smoke-size models with different sequence mixers — GQA ring
+buffer (mixtral SWA), Mamba-2 SSM state, RG-LRU recurrent state — and
+serves a batch of prompts through the same prefill/decode driver the
+dry-run compiles for the production mesh.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.launch.serve import serve
+from repro.models import transformer
+
+ARCHS = ["mixtral_8x7b", "mamba2_2p7b", "recurrentgemma_2b"]
+
+
+def main():
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        key = jax.random.PRNGKey(0)
+        params = transformer.init_params(cfg, key)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 24), 0,
+                                     cfg.vocab_size, jnp.int32)
+        t0 = time.time()
+        toks = serve(cfg, params, prompts, max_len=64, gen=16)
+        dt = time.time() - t0
+        # same prompts -> deterministic greedy output
+        toks2 = serve(cfg, params, prompts, max_len=64, gen=16)
+        assert (jnp.asarray(toks) == jnp.asarray(toks2)).all()
+        print(f"{cfg.name:24s} generated {toks.shape[1]} tokens x "
+              f"{toks.shape[0]} requests in {dt:5.2f}s "
+              f"| sample: {toks[0, :8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.configs.base import (ARCH_IDS, ArchConfig, ShapeSpec, SHAPES,
+                                get_config, registry, shapes_for)

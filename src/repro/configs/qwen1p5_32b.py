@@ -1,0 +1,23 @@
+"""qwen1.5-32b [dense]: MHA (kv=40) with QKV bias. [hf:Qwen/Qwen1.5-*]
+
+The 40-head MHA cache at decode_32k x batch 128 is ~5.5 TiB in bf16 — int8
+KV quantisation gets it to ~10.7 GiB/chip on the single-pod mesh
+(EXPERIMENTS §Dry-run fit accounting).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b", family="dense",
+    num_layers=64, d_model=5120, num_heads=40, num_kv_heads=40,
+    d_ff=27392, vocab_size=152064,
+    qkv_bias=True, rope_theta=1e6, head_dim=128,
+    kv_cache_dtype="int8",
+)
+
+SMOKE = ArchConfig(
+    name="qwen1.5-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=192, vocab_size=512,
+    qkv_bias=True, rope_theta=1e6, head_dim=16,
+    kv_cache_dtype="int8",
+)

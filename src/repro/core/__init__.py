@@ -1,0 +1,13 @@
+"""ULEEN core: the paper's contribution as composable JAX modules."""
+from repro.core.encoding import (ThermometerEncoder, fit_gaussian_thermometer,
+                                 fit_linear_thermometer, fit_mean_binarizer)
+from repro.core.hashing import h3_hash, make_h3_params, murmur_double_hash
+from repro.core.model import (SubmodelSpec, SubmodelStatic, UleenParams,
+                              UleenSpec, binarize_params, compute_hashes,
+                              forward, forward_binary, init_params,
+                              init_static, predict)
+from repro.core.multi_shot import (MultiShotConfig, evaluate, make_eval_fn,
+                                   make_train_step, train_multi_shot)
+from repro.core.one_shot import (OneShotModel, binarize, evaluate_one_shot,
+                                 train_one_shot)
+from repro.core.pruning import prune_and_finetune

@@ -1,0 +1,94 @@
+"""Bloom-filter RAM-node primitives (ULEEN §III-A1).
+
+Three table flavours over one layout (classes, filters, entries):
+
+* binary   (bool)  — inference: response = AND of k looked-up bits
+* counting (int32) — one-shot training: min-tied counter increments + bleaching
+* continuous (f32) — multi-shot training: response = step(min of k entries),
+                     gradients via the straight-through estimator (STE)
+
+The k hash lookups of a filter are a gather along the entries axis; the whole
+batch/class extent is one `take_along_axis` (the paper's "single
+multi-dimensional gather/scatter").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_filter_values(table: jnp.ndarray, hashes: jnp.ndarray) -> jnp.ndarray:
+    """table: (M, N_f, E); hashes: (B, N_f, k) -> values (B, M, N_f, k).
+
+    The same hash indices are reused for every class (paper: shared input
+    order + shared H3 parameters across discriminators).
+    """
+    def one(h):  # h: (N_f, k)
+        return jnp.take_along_axis(table, h[None], axis=2)  # (M, N_f, k)
+
+    return jax.vmap(one)(hashes)
+
+
+def ste_step(x: jnp.ndarray) -> jnp.ndarray:
+    """Unit step with straight-through gradient (f'(x) := 1)."""
+    return x + jax.lax.stop_gradient(jnp.where(x >= 0, 1.0, 0.0) - x)
+
+
+def continuous_filter_response(table: jnp.ndarray, hashes: jnp.ndarray) -> jnp.ndarray:
+    """(M, N_f, E) f32, (B, N_f, k) -> (B, M, N_f) response in {0,1} w/ STE grad.
+
+    min over the k accessed entries, then STE-binarised. Autodiff routes the
+    incoming gradient through the min to exactly one table entry — the
+    gather/scatter pair of the paper's PyTorch implementation.
+    """
+    vals = gather_filter_values(table, hashes)
+    m = jnp.min(vals, axis=-1)
+    return ste_step(m)
+
+
+def binary_filter_response(table: jnp.ndarray, hashes: jnp.ndarray) -> jnp.ndarray:
+    """Inference path: AND of the k accessed bits. table bool -> (B, M, N_f) bool."""
+    vals = gather_filter_values(table, hashes)
+    return jnp.all(vals, axis=-1)
+
+
+def counting_min_values(table: jnp.ndarray, hashes: jnp.ndarray) -> jnp.ndarray:
+    """Counting tables: min over k accessed counters -> (B, M, N_f) int32.
+
+    `response(b) = minvals >= b` implements bleaching at threshold b."""
+    vals = gather_filter_values(table, hashes)
+    return jnp.min(vals, axis=-1)
+
+
+def counting_increment(table: jnp.ndarray, hashes: jnp.ndarray,
+                       label: jnp.ndarray) -> jnp.ndarray:
+    """One training sample's counting-Bloom update (ULEEN one-shot rule).
+
+    table: (M, N_f, E) int32; hashes: (N_f, k); label: scalar int.
+    Increment the *smallest* of the k accessed counters (all of them on ties).
+    Only the correct class's discriminator is updated.
+    """
+    m, n_f, _ = table.shape
+    row = table[label]                                     # (N_f, E)
+    vals = jnp.take_along_axis(row, hashes, axis=1)        # (N_f, k)
+    mn = jnp.min(vals, axis=1, keepdims=True)              # (N_f, 1)
+    inc = (vals == mn).astype(table.dtype)                 # (N_f, k)
+    f_idx = jnp.arange(n_f)[:, None]
+    new_row = row.at[f_idx, hashes].add(inc)
+    return table.at[label].set(new_row)
+
+
+def binarize_counting(table: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Counting -> binary Bloom filter at bleaching threshold b (entries >= b)."""
+    return table >= b
+
+
+def binarize_continuous(table: jnp.ndarray) -> jnp.ndarray:
+    """Continuous -> binary Bloom filter (unit step at 0)."""
+    return table >= 0.0
+
+
+def false_positive_rate(n_items: int, entries: int, k: int) -> float:
+    """Classic Bloom FPR estimate (1 - e^{-kn/m})^k — used by capacity planning."""
+    import math
+    return (1.0 - math.exp(-k * n_items / entries)) ** k

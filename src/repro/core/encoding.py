@@ -1,0 +1,69 @@
+"""Input encodings for weightless networks (ULEEN §III-A2).
+
+Gaussian non-linear thermometer encoding: per-feature thresholds at Gaussian
+quantiles fitted on training data, so a t-bit code splits the fitted normal
+into t+1 equal-probability regions. Linear thermometer and 1-bit mean
+binarization are provided as the paper's baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermometerEncoder:
+    """Stateless encoder; thresholds (F, T) are the fitted state."""
+    thresholds: jnp.ndarray  # (features, bits)
+
+    @property
+    def num_features(self) -> int:
+        return self.thresholds.shape[0]
+
+    @property
+    def bits_per_input(self) -> int:
+        return self.thresholds.shape[1]
+
+    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (..., F) float -> bits (..., F*T) bool, LSB-first unary code."""
+        bits = x[..., :, None] > self.thresholds
+        return bits.reshape(*x.shape[:-1], -1)
+
+    def encode_counts(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Compressed form (paper's bus compression): per-feature set-bit count."""
+        return jnp.sum(x[..., :, None] > self.thresholds, axis=-1).astype(jnp.uint8)
+
+    def decompress(self, counts: jnp.ndarray) -> jnp.ndarray:
+        """Recover unary bits from counts (the accelerator's decompression unit)."""
+        t = self.bits_per_input
+        iota = jnp.arange(t, dtype=counts.dtype)
+        bits = iota[None, :] < counts[..., :, None]
+        return bits.reshape(*counts.shape[:-1], -1)
+
+
+def fit_gaussian_thermometer(x_train: jnp.ndarray, bits: int) -> ThermometerEncoder:
+    """Thresholds at Gaussian quantiles i/(t+1), i = 1..t (ULEEN's encoding)."""
+    mean = jnp.mean(x_train, axis=0)
+    std = jnp.std(x_train, axis=0) + 1e-6
+    probs = jnp.arange(1, bits + 1, dtype=jnp.float32) / (bits + 1)
+    z = ndtri(probs)  # (T,)
+    thr = mean[:, None] + std[:, None] * z[None, :]
+    return ThermometerEncoder(thresholds=thr)
+
+
+def fit_linear_thermometer(x_train: jnp.ndarray, bits: int) -> ThermometerEncoder:
+    """Equal-interval thresholds between per-feature min and max (prior work)."""
+    lo = jnp.min(x_train, axis=0)
+    hi = jnp.max(x_train, axis=0)
+    fracs = jnp.arange(1, bits + 1, dtype=jnp.float32) / (bits + 1)
+    thr = lo[:, None] + (hi - lo)[:, None] * fracs[None, :]
+    return ThermometerEncoder(thresholds=thr)
+
+
+def fit_mean_binarizer(x_train: jnp.ndarray) -> ThermometerEncoder:
+    """Classic 1-bit WiSARD encoding: x > mean."""
+    mean = jnp.mean(x_train, axis=0)
+    return ThermometerEncoder(thresholds=mean[:, None])

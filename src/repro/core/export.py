@@ -1,0 +1,120 @@
+"""Export a trained ULEEN model to a deployable inference artifact.
+
+Binary tables are bit-packed (32 entries per uint32 word), pruned filters are
+dropped per-discriminator (ragged layout, stored with per-class filter index
+lists exactly like the RTL generator consumes), and model size is accounted
+the way the paper reports it (surviving filters x entries bits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model import SubmodelStatic, UleenParams, UleenSpec, binarize_params
+
+
+@dataclasses.dataclass
+class SubmodelArtifact:
+    packed: np.ndarray          # (M, N_f, E//32) uint32 bit-packed table
+    mask: np.ndarray            # (M, N_f) bool survival mask
+    perm: np.ndarray            # (N_f, n) int32
+    h3: np.ndarray              # (k, n) uint32
+    entries: int
+    inputs_per_filter: int
+    num_hashes: int
+
+
+@dataclasses.dataclass
+class InferenceArtifact:
+    submodels: list
+    bias: np.ndarray            # (M,) int32
+    num_classes: int
+    total_bits: int
+    bits_per_input: int
+
+    @property
+    def size_kib(self) -> float:
+        bits = sum(int(sm.mask.sum()) * sm.entries for sm in self.submodels)
+        return bits / 8.0 / 1024.0
+
+    @property
+    def hash_ops_per_inference(self) -> int:
+        """Hash computations: one per filter per hash fn per submodel
+        (shared across discriminators — the paper's central hash block)."""
+        return sum(sm.perm.shape[0] * sm.num_hashes for sm in self.submodels)
+
+    @property
+    def lookups_per_inference(self) -> int:
+        return sum(int(sm.mask.sum()) * sm.num_hashes for sm in self.submodels)
+
+
+def pack_table(table_bin: np.ndarray) -> np.ndarray:
+    """(M, N_f, E) bool -> (M, N_f, E//32) uint32."""
+    m, n_f, e = table_bin.shape
+    assert e % 32 == 0 or e < 32
+    pad = (-e) % 32
+    if pad:
+        table_bin = np.concatenate(
+            [table_bin, np.zeros((m, n_f, pad), bool)], axis=-1)
+    words = table_bin.reshape(m, n_f, -1, 32).astype(np.uint32)
+    weights = (np.uint32(1) << np.arange(32, dtype=np.uint32))
+    return (words * weights).sum(axis=-1, dtype=np.uint64).astype(np.uint32)
+
+
+def unpack_table(packed: np.ndarray, entries: int) -> np.ndarray:
+    m, n_f, w = packed.shape
+    bits = (packed[..., :, None] >> np.arange(32, dtype=np.uint32)) & 1
+    return bits.reshape(m, n_f, w * 32)[..., :entries].astype(bool)
+
+
+def export_model(spec: UleenSpec, statics: Sequence[SubmodelStatic],
+                 params: UleenParams) -> InferenceArtifact:
+    tables_bin, masks, bias = binarize_params(params)
+    subs = []
+    for sm, st, tb, mask in zip(spec.submodels, statics, tables_bin, masks):
+        subs.append(SubmodelArtifact(
+            packed=pack_table(np.asarray(tb)),
+            mask=np.asarray(mask) > 0,
+            perm=np.asarray(st.perm),
+            h3=np.asarray(st.h3),
+            entries=sm.entries,
+            inputs_per_filter=sm.inputs_per_filter,
+            num_hashes=sm.num_hashes,
+        ))
+    return InferenceArtifact(submodels=subs,
+                             bias=np.asarray(jnp.round(bias), np.int32),
+                             num_classes=spec.num_classes,
+                             total_bits=spec.total_bits,
+                             bits_per_input=spec.bits_per_input)
+
+
+def save(artifact: InferenceArtifact, path: str) -> None:
+    arrs = {"bias": artifact.bias,
+            "meta": np.array([artifact.num_classes, artifact.total_bits,
+                              artifact.bits_per_input, len(artifact.submodels)])}
+    for i, sm in enumerate(artifact.submodels):
+        arrs[f"sm{i}_packed"] = sm.packed
+        arrs[f"sm{i}_mask"] = sm.mask
+        arrs[f"sm{i}_perm"] = sm.perm
+        arrs[f"sm{i}_h3"] = sm.h3
+        arrs[f"sm{i}_cfg"] = np.array([sm.entries, sm.inputs_per_filter,
+                                       sm.num_hashes])
+    np.savez_compressed(path, **arrs)
+
+
+def load(path: str) -> InferenceArtifact:
+    z = np.load(path)
+    m, total_bits, bpi, n_sub = z["meta"]
+    subs = []
+    for i in range(int(n_sub)):
+        e, n, k = z[f"sm{i}_cfg"]
+        subs.append(SubmodelArtifact(
+            packed=z[f"sm{i}_packed"], mask=z[f"sm{i}_mask"],
+            perm=z[f"sm{i}_perm"], h3=z[f"sm{i}_h3"],
+            entries=int(e), inputs_per_filter=int(n), num_hashes=int(k)))
+    return InferenceArtifact(submodels=subs, bias=z["bias"],
+                             num_classes=int(m), total_bits=int(total_bits),
+                             bits_per_input=int(bpi))

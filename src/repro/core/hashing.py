@@ -1,0 +1,77 @@
+"""Hash functions for Bloom-filter RAM nodes.
+
+H3 family (Carter & Wegman): h_j(x) = XOR_{i : x_i = 1} p_{j,i}, with p random
+words in [0, 2^log2(entries)). Arithmetic-free (AND/XOR only) — this is the
+paper's central-hash-block function. Parameters are shared by every Bloom
+filter in a submodel (paper §III-C), so a single (k, n) parameter matrix
+serves all discriminators: the hash of a filter's input tuple depends only on
+the tuple bits, computed once and reused across all classes.
+
+A MurmurHash3-style double hash is provided solely for the Bloom WiSARD
+baseline comparison (the paper's prior work used Murmur; ULEEN does not).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_h3_params(key: jax.Array, k: int, n_inputs: int, log2_entries: int) -> jnp.ndarray:
+    """(k, n_inputs) uint32 parameters, each in [0, 2^log2_entries)."""
+    return jax.random.randint(
+        key, (k, n_inputs), 0, 2 ** log2_entries, dtype=jnp.uint32)
+
+
+def h3_hash(bits: jnp.ndarray, params: jnp.ndarray) -> jnp.ndarray:
+    """bits: (..., n) bool; params: (k, n) uint32 -> hashes (..., k) int32.
+
+    XOR-reduction of the parameter words selected by set input bits.
+    """
+    sel = jnp.where(bits[..., None, :], params, jnp.uint32(0))  # (..., k, n)
+    # XOR-reduce over the input axis.
+    h = jax.lax.reduce(sel, jnp.uint32(0), jax.lax.bitwise_xor, [sel.ndim - 1])
+    return h.astype(jnp.int32)
+
+
+def _murmur_fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def pack_bits_u32(bits: jnp.ndarray) -> jnp.ndarray:
+    """bits (..., n) bool -> (..., ceil(n/32)) uint32 little-endian bit pack."""
+    n = bits.shape[-1]
+    pad = (-n) % 32
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*bits.shape[:-1], pad), bits.dtype)], axis=-1)
+    words = bits.reshape(*bits.shape[:-1], -1, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(words * weights, axis=-1, dtype=jnp.uint32)
+
+
+def murmur_double_hash(bits: jnp.ndarray, k: int, entries: int) -> jnp.ndarray:
+    """Bloom WiSARD's double hashing: h_i = h1 + i*h2 (mod entries).
+
+    bits: (..., n) bool -> (..., k) int32. Murmur-style finalizer over packed
+    words. Used only by the Bloom WiSARD baseline.
+    """
+    words = pack_bits_u32(bits)
+    seed1 = jnp.uint32(0x9747B28C)
+    seed2 = jnp.uint32(0x5BD1E995)
+
+    def fold(seed):
+        acc = jnp.full(words.shape[:-1], seed, jnp.uint32)
+        for i in range(words.shape[-1]):
+            acc = _murmur_fmix32(acc ^ words[..., i] ^ jnp.uint32(i * 0x01000193))
+        return acc
+
+    h1 = fold(seed1)
+    h2 = fold(seed2) | jnp.uint32(1)
+    ks = jnp.arange(k, dtype=jnp.uint32)
+    h = (h1[..., None] + ks * h2[..., None]) % jnp.uint32(entries)
+    return h.astype(jnp.int32)

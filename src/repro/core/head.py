@@ -1,0 +1,95 @@
+"""UleenHead: the paper's technique as a first-class module for LM backbones.
+
+Attaches a weightless (Bloom-filter WiSARD ensemble) classifier to pooled
+hidden states of any architecture in the zoo — early-exit gating,
+classification distillation, or extreme-edge export of the head alone.
+
+Pipeline: pooled hidden h (B, D) -> RMS-normalise (so features ~ N(0,1)) ->
+Gaussian thermometer encode against fixed quantile thresholds -> H3 hash ->
+continuous Bloom discriminators -> class scores. Trained jointly with the
+backbone loss via STE on the tables; the thermometer comparison is a hard
+threshold, so the backbone receives no gradient through the head by default
+(stop-gradient; the head is an observer — see DESIGN §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+from repro.core import model as uleen_model
+from repro.core.model import SubmodelSpec, UleenSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class UleenHeadConfig:
+    num_classes: int
+    hidden_dim: int
+    bits_per_feature: int = 4
+    submodels: tuple = (SubmodelSpec(16, 9), SubmodelSpec(24, 10))
+    dropout: float = 0.5
+    backbone_grad: bool = False   # if True, STE through the thermometer too
+
+    def spec(self) -> UleenSpec:
+        return UleenSpec(num_classes=self.num_classes,
+                         total_bits=self.hidden_dim * self.bits_per_feature,
+                         submodels=self.submodels,
+                         bits_per_input=self.bits_per_feature,
+                         dropout=self.dropout)
+
+
+class UleenHeadState(NamedTuple):
+    params: uleen_model.UleenParams
+    statics: tuple                      # SubmodelStatic pytree leaves
+    thresholds: jnp.ndarray             # (T,) gaussian quantiles
+
+
+def init_head(key: jax.Array, cfg: UleenHeadConfig) -> UleenHeadState:
+    spec = cfg.spec()
+    k1, k2 = jax.random.split(key)
+    statics = tuple(uleen_model.init_static(k1, spec))
+    params = uleen_model.init_params(k2, spec)
+    t = cfg.bits_per_feature
+    probs = jnp.arange(1, t + 1, dtype=jnp.float32) / (t + 1)
+    return UleenHeadState(params=params, statics=statics,
+                          thresholds=ndtri(probs))
+
+
+def _rms_normalize(h: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    sd = jnp.std(h, axis=-1, keepdims=True) + 1e-6
+    return (h - mu) / sd
+
+
+def encode_hidden(cfg: UleenHeadConfig, state: UleenHeadState,
+                  h: jnp.ndarray) -> jnp.ndarray:
+    """h: (B, D) -> bits (B, D*T) bool (or STE-float if backbone_grad)."""
+    z = _rms_normalize(h)
+    cmp = z[..., :, None] - state.thresholds          # (B, D, T)
+    if cfg.backbone_grad:
+        from repro.core.bloom import ste_step
+        bits = ste_step(cmp)
+    else:
+        bits = (cmp > 0)
+    return bits.reshape(*h.shape[:-1], -1)
+
+
+def apply_head(cfg: UleenHeadConfig, state: UleenHeadState, h: jnp.ndarray,
+               *, train: bool = False, rng=None) -> jnp.ndarray:
+    """Pooled hidden states -> (B, num_classes) ensemble scores."""
+    spec = cfg.spec()
+    bits = encode_hidden(cfg, state, jax.lax.stop_gradient(h)
+                         if not cfg.backbone_grad else h)
+    hashes = uleen_model.compute_hashes(spec, state.statics, bits > 0
+                                        if bits.dtype != jnp.bool_ else bits)
+    return uleen_model.forward(spec, state.params, hashes, train=train, rng=rng)
+
+
+def head_loss(cfg: UleenHeadConfig, state: UleenHeadState, h: jnp.ndarray,
+              labels: jnp.ndarray, *, rng=None) -> jnp.ndarray:
+    from repro.core.multi_shot import cross_entropy
+    scores = apply_head(cfg, state, h, train=rng is not None, rng=rng)
+    return cross_entropy(scores, labels)

@@ -1,0 +1,129 @@
+"""Multi-shot (gradient/STE) training for ULEEN (§III-B2).
+
+Continuous Bloom tables in [-1, 1], unit-step binarisation on the forward
+pass, straight-through gradients, softmax + cross-entropy over summed
+ensemble responses, Adam(1e-3), dropout(0.5) on filter outputs. Hashes are
+precomputed per batch (they carry no gradient).
+
+The train step is a pure function of (params, opt_state, hashes, labels, rng)
+so it pjit-shards over the production mesh: batch over data axes, tables
+replicated or sharded over `model` by class (see repro/dist/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model import (SubmodelStatic, UleenParams, UleenSpec,
+                              compute_hashes, forward)
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiShotConfig:
+    epochs: int = 10
+    batch_size: int = 256
+    learning_rate: float = 1e-3
+    clip_table: float = 1.0          # keep entries in [-1, 1] (paper init range)
+    label_smoothing: float = 0.0
+    seed: int = 0
+    verbose: bool = False
+
+
+def cross_entropy(scores: jnp.ndarray, labels: jnp.ndarray,
+                  smoothing: float = 0.0) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    m = scores.shape[-1]
+    onehot = jax.nn.one_hot(labels, m)
+    if smoothing:
+        onehot = onehot * (1.0 - smoothing) + smoothing / m
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def make_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer,
+                    clip_table: float = 1.0, smoothing: float = 0.0) -> Callable:
+    def loss_fn(params: UleenParams, hashes, labels, rng):
+        scores = forward(spec, params, hashes, train=True, rng=rng)
+        loss = cross_entropy(scores, labels, smoothing)
+        acc = jnp.mean(jnp.argmax(scores, -1) == labels)
+        return loss, acc
+
+    def train_step(params, opt_state, hashes, labels, rng):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, hashes, labels, rng)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        if clip_table:
+            params = params._replace(tables=tuple(
+                jnp.clip(t, -clip_table, clip_table) for t in params.tables))
+        return params, opt_state, loss, acc
+
+    return train_step
+
+
+def make_eval_fn(spec: UleenSpec) -> Callable:
+    def eval_fn(params, hashes, labels):
+        scores = forward(spec, params, hashes, train=False)
+        return jnp.mean(jnp.argmax(scores, -1) == labels)
+    return eval_fn
+
+
+class TrainResult(NamedTuple):
+    params: UleenParams
+    history: list
+    val_accuracy: float
+
+
+def train_multi_shot(spec: UleenSpec, statics: Sequence[SubmodelStatic],
+                     params: UleenParams,
+                     bits_train: jnp.ndarray, labels_train: jnp.ndarray,
+                     bits_val: jnp.ndarray, labels_val: jnp.ndarray,
+                     cfg: MultiShotConfig = MultiShotConfig()) -> TrainResult:
+    """Single-host training driver (examples/tests). The distributed driver
+    lives in repro/launch/train.py and reuses make_train_step under pjit."""
+    optimizer = opt_lib.adam(cfg.learning_rate)
+    opt_state = optimizer.init(params)
+    train_step = jax.jit(make_train_step(spec, optimizer, cfg.clip_table,
+                                         cfg.label_smoothing))
+    eval_fn = jax.jit(make_eval_fn(spec))
+
+    # Hashes are static per sample: compute once for the whole epoch set.
+    h_train = compute_hashes(spec, statics, bits_train)
+    h_val = compute_hashes(spec, statics, bits_val)
+
+    n = bits_train.shape[0]
+    steps_per_epoch = max(1, n // cfg.batch_size)
+    rng = jax.random.PRNGKey(cfg.seed)
+    history = []
+    rng_np = np.random.default_rng(cfg.seed)
+
+    for epoch in range(cfg.epochs):
+        perm = rng_np.permutation(n)
+        ep_loss = ep_acc = 0.0
+        for s in range(steps_per_epoch):
+            idx = perm[s * cfg.batch_size:(s + 1) * cfg.batch_size]
+            hb = tuple(h[idx] for h in h_train)
+            yb = labels_train[idx]
+            rng, sub = jax.random.split(rng)
+            params, opt_state, loss, acc = train_step(params, opt_state, hb, yb, sub)
+            ep_loss += float(loss); ep_acc += float(acc)
+        val_acc = float(eval_fn(params, h_val, labels_val))
+        history.append(dict(epoch=epoch, loss=ep_loss / steps_per_epoch,
+                            train_acc=ep_acc / steps_per_epoch, val_acc=val_acc,
+                            time=time.time()))
+        if cfg.verbose:
+            print(f"[multi-shot] epoch {epoch}: loss={history[-1]['loss']:.4f} "
+                  f"train_acc={history[-1]['train_acc']:.4f} val_acc={val_acc:.4f}")
+    return TrainResult(params=params, history=history,
+                       val_accuracy=history[-1]["val_acc"] if history else 0.0)
+
+
+def evaluate(spec: UleenSpec, statics: Sequence[SubmodelStatic],
+             params: UleenParams, bits: jnp.ndarray, labels: jnp.ndarray) -> float:
+    hashes = compute_hashes(spec, statics, bits)
+    return float(jax.jit(make_eval_fn(spec))(params, hashes, labels))

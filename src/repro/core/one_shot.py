@@ -1,0 +1,113 @@
+"""One-shot training with counting Bloom filters + bleaching (ULEEN §III-B1).
+
+Training presents each encoded sample once to the correct class's
+discriminator, incrementing the smallest accessed counter(s). Afterwards a
+bleaching threshold b is binary-searched on a validation set; counters >= b
+binarise to 1 (Figure 7a of the paper).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bloom
+from repro.core.model import SubmodelStatic, UleenSpec, compute_hashes
+
+
+class OneShotModel(NamedTuple):
+    counting: tuple[jnp.ndarray, ...]   # (M, N_f, E) int32 per submodel
+    bleach: jnp.ndarray                 # scalar int32, chosen threshold
+    bias: jnp.ndarray                   # (M,) float32 (zeros; kept for API parity)
+
+
+def _train_tables(spec: UleenSpec, hashes: jnp.ndarray, labels: jnp.ndarray,
+                  n_f: int, entries: int) -> jnp.ndarray:
+    """Sequential scan over samples (the rule is order-dependent via ties)."""
+    table0 = jnp.zeros((spec.num_classes, n_f, entries), jnp.int32)
+
+    def step(table, xs):
+        h, y = xs
+        return bloom.counting_increment(table, h, y), None
+
+    table, _ = jax.lax.scan(step, table0, (hashes, labels))
+    return table
+
+
+def train_one_shot(spec: UleenSpec, statics: Sequence[SubmodelStatic],
+                   bits_train: jnp.ndarray, labels_train: jnp.ndarray,
+                   bits_val: jnp.ndarray, labels_val: jnp.ndarray,
+                   *, hash_family: str = "h3",
+                   search_steps: int = 10) -> OneShotModel:
+    """Fit counting tables on (bits, labels) and bleach on the validation set."""
+    h_train = compute_hashes(spec, statics, bits_train, hash_family=hash_family)
+    h_val = compute_hashes(spec, statics, bits_val, hash_family=hash_family)
+
+    counting = []
+    for i, sm in enumerate(spec.submodels):
+        n_f = spec.num_filters(sm)
+        counting.append(jax.jit(
+            _train_tables, static_argnums=(0, 3, 4)
+        )(spec, h_train[i], labels_train, n_f, sm.entries))
+
+    # Validation min-counter values, computed once: (B, M, N_f) per submodel.
+    minvals = [bloom.counting_min_values(t, h) for t, h in zip(counting, h_val)]
+
+    def accuracy_at(b):
+        scores = sum(jnp.sum(mv >= b, axis=-1, dtype=jnp.int32) for mv in minvals)
+        return jnp.mean(jnp.argmax(scores, axis=-1) == labels_val)
+
+    max_b = int(max(jnp.max(t) for t in counting))
+    b = _bleach_search(accuracy_at, max_b, search_steps)
+    return OneShotModel(counting=tuple(counting), bleach=jnp.asarray(b, jnp.int32),
+                        bias=jnp.zeros(spec.num_classes, jnp.float32))
+
+
+def _bleach_search(accuracy_at, max_b: int, steps: int) -> int:
+    """Coarse-to-fine search for the accuracy-maximising bleach threshold.
+
+    The classic bisection (compare acc(mid) vs acc(mid+1)) assumes strict
+    unimodality and is derailed by the plateaus real curves have; since
+    accuracy_at(b) is one vector comparison over precomputed min-counter
+    values, a log-spaced grid + local refinement is just as cheap and
+    robust (still O(steps + refine) evaluations).
+    """
+    steps = max(1, steps)
+    hi = max(1, max_b)
+    grid = sorted({1, hi} | {
+        int(round(hi ** (i / max(1, 2 * steps - 1))))
+        for i in range(2 * steps)})
+    best_b, best_acc = 1, -1.0
+    for b in grid:
+        a = float(accuracy_at(b))
+        if a > best_acc:
+            best_b, best_acc = b, a
+    lo = max(1, best_b // 2)
+    up = min(hi, best_b * 2)
+    step = max(1, (up - lo) // (2 * steps))
+    for b in range(lo, up + 1, step):
+        a = float(accuracy_at(b))
+        if a > best_acc:
+            best_b, best_acc = b, a
+    for b in range(max(1, best_b - 2), min(hi, best_b + 2) + 1):
+        a = float(accuracy_at(b))
+        if a > best_acc:
+            best_b, best_acc = b, a
+    return best_b
+
+
+def binarize(model: OneShotModel) -> tuple[jnp.ndarray, ...]:
+    """Counting tables -> binary Bloom filters at the chosen bleach threshold."""
+    return tuple(bloom.binarize_counting(t, model.bleach) for t in model.counting)
+
+
+def evaluate_one_shot(spec: UleenSpec, statics: Sequence[SubmodelStatic],
+                      model: OneShotModel, bits: jnp.ndarray,
+                      labels: jnp.ndarray, *, hash_family: str = "h3") -> float:
+    hashes = compute_hashes(spec, statics, bits, hash_family=hash_family)
+    scores = jnp.zeros((bits.shape[0], spec.num_classes), jnp.int32)
+    for t, h in zip(model.counting, hashes):
+        mv = bloom.counting_min_values(t, h)
+        scores = scores + jnp.sum(mv >= model.bleach, axis=-1, dtype=jnp.int32)
+    return float(jnp.mean(jnp.argmax(scores, axis=-1) == labels))

@@ -1,0 +1,91 @@
+"""Post-training pruning of RAM nodes (ULEEN §III-A4).
+
+1. Correlate each filter's binarised output with the correct-class indicator
+   over the training set (per discriminator).
+2. Zero out the lowest-|prune_ratio| fraction per discriminator (mask).
+3. Learn integer per-class biases compensating the removed response mass.
+4. Fine-tune the surviving filters (+ bias) with the multi-shot rule.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bloom
+from repro.core.model import SubmodelStatic, UleenParams, UleenSpec
+from repro.core.multi_shot import MultiShotConfig, TrainResult, train_multi_shot
+
+
+def filter_correlations(spec: UleenSpec, params: UleenParams,
+                        hashes: Sequence[jnp.ndarray],
+                        labels: jnp.ndarray) -> list[jnp.ndarray]:
+    """Pearson correlation of each filter output with the class indicator.
+
+    Returns per-submodel arrays (M, N_f). Filter outputs are the binarised
+    responses on the (training) batch; the indicator for discriminator c is
+    1[label == c].
+    """
+    out = []
+    ind = jax.nn.one_hot(labels, spec.num_classes)            # (B, M)
+    ind_c = ind - jnp.mean(ind, axis=0, keepdims=True)
+    ind_std = jnp.std(ind, axis=0) + 1e-6                      # (M,)
+    for table, h in zip(params.tables, hashes):
+        resp = bloom.continuous_filter_response(table, h)      # (B, M, N_f)
+        resp = jax.lax.stop_gradient(resp)
+        mu = jnp.mean(resp, axis=0, keepdims=True)
+        sd = jnp.std(resp, axis=0) + 1e-6                      # (M, N_f)
+        cov = jnp.mean((resp - mu) * ind_c[:, :, None], axis=0)
+        out.append(cov / (sd * ind_std[:, None]))
+    return out
+
+
+def prune_masks(spec: UleenSpec, correlations: Sequence[jnp.ndarray],
+                ratio: float) -> tuple[jnp.ndarray, ...]:
+    """Keep the top-(1-ratio) fraction by |correlation| per discriminator."""
+    masks = []
+    for corr in correlations:
+        m, n_f = corr.shape
+        k_drop = int(round(ratio * n_f))
+        if k_drop == 0:
+            masks.append(jnp.ones((m, n_f), jnp.float32))
+            continue
+        order = jnp.argsort(jnp.abs(corr), axis=1)             # ascending
+        drop = order[:, :k_drop]
+        mask = jnp.ones((m, n_f), jnp.float32)
+        mask = mask.at[jnp.arange(m)[:, None], drop].set(0.0)
+        masks.append(mask)
+    return tuple(masks)
+
+
+def init_bias(spec: UleenSpec, params: UleenParams, new_masks,
+              hashes: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Integer bias ~= mean response mass removed by pruning, per class."""
+    removed = jnp.zeros(spec.num_classes)
+    for table, h, old_m, new_m in zip(params.tables, hashes, params.masks,
+                                      new_masks):
+        resp = jax.lax.stop_gradient(bloom.continuous_filter_response(table, h))
+        gone = (old_m - new_m)[None]                           # (1, M, N_f)
+        removed = removed + jnp.mean(jnp.sum(resp * gone, axis=-1), axis=0)
+    return jnp.round(removed)
+
+
+def prune_and_finetune(spec: UleenSpec, statics: Sequence[SubmodelStatic],
+                       params: UleenParams,
+                       bits_train, labels_train, bits_val, labels_val,
+                       *, ratio: float = 0.3,
+                       finetune: MultiShotConfig = MultiShotConfig(epochs=3)
+                       ) -> TrainResult:
+    from repro.core.model import compute_hashes
+    hashes = compute_hashes(spec, statics, bits_train)
+    corr = filter_correlations(spec, params, hashes, labels_train)
+    masks = prune_masks(spec, corr, ratio)
+    bias = params.bias + init_bias(spec, params, masks, hashes)
+    pruned = params._replace(masks=masks, bias=bias)
+    if finetune.epochs <= 0:
+        from repro.core.multi_shot import evaluate
+        acc = evaluate(spec, statics, pruned, bits_val, labels_val)
+        return TrainResult(params=pruned, history=[], val_accuracy=acc)
+    return train_multi_shot(spec, statics, pruned, bits_train, labels_train,
+                            bits_val, labels_val, finetune)

@@ -1,0 +1,119 @@
+"""Flash attention Pallas kernel — the LM zoo's prefill compute hot spot.
+
+Streaming-softmax (Rabe & Staats / FlashAttention) with BlockSpec tiling:
+grid = (batch*heads, q_blocks, kv_blocks), kv innermost so the f32
+(m, l, acc) running state lives in VMEM scratch across kv steps. Supports
+causal masking and an optional sliding window (mixtral SWA / recurrentgemma
+local attention). Out-of-range kv blocks are skipped with pl.when.
+
+The dry-run/CPU path of the models uses the jnp oracle in ref.py (Pallas TPU
+kernels do not lower on the CPU backend); on TPU `ops.flash_attention`
+switches to this kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Skip fully-masked blocks (strictly above the diagonal / out of window).
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window > 0:
+        run = jnp.logical_and(run, k_start + block_k - 1 >= q_start - window)
+
+    @pl.when(run if isinstance(run, jnp.ndarray) else run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)               # (Bq, D)
+        k = k_ref[0].astype(jnp.float32)               # (Bk, D)
+        v = v_ref[0].astype(jnp.float32)               # (Bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        iq = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ik = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = ik < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, ik <= iq)
+        if window > 0:
+            mask = jnp.logical_and(mask, ik > iq - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (Bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (Bq, Bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_tiled(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                          causal: bool = True, window: int = 0,
+                          block_q: int = 128, block_k: int = 128,
+                          interpret: bool = False) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BH, Sk, D) -> (BH, Sq, D). GQA handled by ops."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pq, pk = (-sq) % block_q, (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    sqp, skp = q.shape[1], k.shape[1]
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, kv_len=sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, sqp // block_q, skp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sqp, d), q.dtype),
+        scratch_shapes=[
+            # (m, l, acc) running softmax state, persistent across kv steps
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

@@ -1,0 +1,108 @@
+"""Fused ULEEN inference kernel: hash -> lookup -> AND -> popcount -> bias.
+
+The whole accelerator pipeline (paper Fig. 8/9) as ONE Pallas TPU kernel per
+submodel. TPU adaptation (DESIGN §2): the FPGA's random-access LUT reads
+become one-hot MXU matmuls —
+
+    value[b, m, f] = sum_e onehot(h[b, f])[e] * table[m, f, e]
+
+which has identical semantics but turns a gather (slow on TPU) into a
+systolic contraction (fast). H3 hashing is an unrolled XOR-select reduction
+on the VPU; the k looked-up bits AND via product; popcount is the block's
+partial sum, accumulated across filter tiles into the (B, M) response.
+
+Grid: (batch_tiles, filter_tiles); the filter axis is innermost/sequential so
+the output block is revisited and accumulated (bias added at tile 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _h3_hashes(bits_i32: jnp.ndarray, params_row) -> jnp.ndarray:
+    """bits: (..., n) int32 in {0,1}; params_row: (n,) int32 -> (...,) int32.
+
+    XOR-reduce of parameter words selected by set bits (unrolled; n <= ~40).
+    """
+    n = bits_i32.shape[-1]
+    acc = jnp.zeros(bits_i32.shape[:-1], jnp.int32)
+    for i in range(n):
+        acc = acc ^ jnp.where(bits_i32[..., i] != 0, params_row[i], 0)
+    return acc
+
+
+def fused_wnn_kernel(tuples_ref, params_ref, table_ref, mask_ref, bias_ref,
+                     out_ref, *, entries: int, num_hashes: int):
+    f_idx = pl.program_id(1)
+    bits = tuples_ref[...].astype(jnp.int32)          # (Bt, Ft, n)
+    table = table_ref[...].astype(jnp.int8)           # (M, Ft, E)
+    mask = mask_ref[...].astype(jnp.int32)            # (M, Ft)
+    bt, ft, _ = bits.shape
+    m = table.shape[0]
+
+    resp = jnp.ones((bt, m, ft), jnp.int32)
+    iota_e = jax.lax.broadcasted_iota(jnp.int32, (bt, ft, entries), 2)
+    for j in range(num_hashes):
+        h = _h3_hashes(bits, params_ref[j, :])        # (Bt, Ft)
+        onehot = (iota_e == h[..., None]).astype(jnp.int8)
+        # (Bt, Ft, E) x (M, Ft, E) -> (Bt, M, Ft): batched over Ft on the MXU.
+        val = jax.lax.dot_general(
+            onehot, table,
+            dimension_numbers=(((2,), (2,)), ((1,), (1,))),
+            preferred_element_type=jnp.int32)         # (Ft, Bt, M)
+        resp = resp * jnp.transpose(val, (1, 2, 0))   # AND across hashes
+    resp = resp * mask[None]                          # (Bt, M, Ft)
+    partial = jnp.sum(resp, axis=-1)                  # (Bt, M)
+
+    @pl.when(f_idx == 0)
+    def _init():
+        out_ref[...] = partial + bias_ref[...][None, :]
+
+    @pl.when(f_idx != 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+def fused_wnn(tuples: jnp.ndarray, params: jnp.ndarray, table: jnp.ndarray,
+              mask: jnp.ndarray, bias: jnp.ndarray, *,
+              block_b: int = 128, block_f: int = 256,
+              interpret: bool = False) -> jnp.ndarray:
+    """tuples: (B, N_f, n) int8 {0,1}; params: (k, n) int32;
+    table: (M, N_f, E) int8 {0,1}; mask: (M, N_f) int8; bias: (M,) int32
+    -> scores (B, M) int32. Pads B and N_f to block multiples internally.
+    """
+    b, n_f, n = tuples.shape
+    m, _, entries = table.shape
+    k = params.shape[0]
+    block_b = min(block_b, max(8, b))
+    # VMEM budget: one-hot is (Bt, Ft, E) int8; keep it under ~4 MiB.
+    budget = 4 * 1024 * 1024
+    block_f = min(block_f, max(8, budget // max(1, block_b * entries)))
+    pb, pf = (-b) % block_b, (-n_f) % block_f
+    if pb or pf:
+        tuples = jnp.pad(tuples, ((0, pb), (0, pf), (0, 0)))
+        table = jnp.pad(table, ((0, 0), (0, pf), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pf)))
+    bp, fp = tuples.shape[0], tuples.shape[1]
+
+    kernel = functools.partial(fused_wnn_kernel, entries=entries,
+                               num_hashes=k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bp // block_b, fp // block_f),
+        in_specs=[
+            pl.BlockSpec((block_b, block_f, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((k, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((m, block_f, entries), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((m, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((m,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, m), jnp.int32),
+        interpret=interpret,
+    )(tuples, params, table, mask, bias)
+    return out[:b]

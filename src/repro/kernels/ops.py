@@ -1,0 +1,75 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU backend (this container) the wrappers run the kernels in
+interpret mode (bit-exact Python execution of the kernel body) or fall back
+to the jnp oracle where that is faster; on TPU they lower to Mosaic. The
+model code calls only these entry points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_tiled
+from repro.kernels.fused_wnn import fused_wnn
+from repro.kernels.h3_hash import h3_hash_tiled
+from repro.kernels.thermometer import thermometer_decompress, thermometer_encode
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def wnn_infer(tuples, params, table, mask, bias, *, use_kernel: bool = False):
+    """Fused WNN inference scores (B, M) int32 (one submodel)."""
+    if use_kernel or _on_tpu():
+        return fused_wnn(tuples, params, table, mask, bias,
+                         interpret=not _on_tpu())
+    return ref.fused_wnn_ref(tuples, params, table, mask, bias)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def h3_hash(tuples, params, *, use_kernel: bool = False):
+    if use_kernel or _on_tpu():
+        return h3_hash_tiled(tuples, params, interpret=not _on_tpu())
+    return ref.h3_hash_ref(tuples, params)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def thermometer(x, thresholds, *, use_kernel: bool = False):
+    if use_kernel or _on_tpu():
+        return thermometer_encode(x, thresholds, interpret=not _on_tpu())
+    return ref.thermometer_ref(x, thresholds)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
+def decompress(counts, bits: int, *, use_kernel: bool = False):
+    if use_kernel or _on_tpu():
+        return thermometer_decompress(counts, bits, interpret=not _on_tpu())
+    return ref.decompress_ref(counts, bits)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "use_kernel"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_kernel: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D), GQA via head repetition."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, -1, d)
+    vf = v.reshape(b * h, -1, d)
+    if use_kernel or _on_tpu():
+        out = flash_attention_tiled(qf, kf, vf, causal=causal, window=window,
+                                    interpret=not _on_tpu())
+    else:
+        out = ref.attention_ref(qf, kf, vf, causal=causal, window=window)
+    return out.reshape(b, h, sq, d)

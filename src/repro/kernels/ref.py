@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def h3_hash_ref(tuples: jnp.ndarray, params: jnp.ndarray) -> jnp.ndarray:
+    """tuples: (B, N_f, n) int {0,1}; params: (k, n) int32 -> (B, N_f, k)."""
+    sel = jnp.where(tuples[..., None, :] != 0, params.astype(jnp.int32), 0)
+    return jax.lax.reduce(sel, jnp.int32(0), jax.lax.bitwise_xor,
+                          [sel.ndim - 1])
+
+
+def fused_wnn_ref(tuples: jnp.ndarray, params: jnp.ndarray,
+                  table: jnp.ndarray, mask: jnp.ndarray,
+                  bias: jnp.ndarray) -> jnp.ndarray:
+    """Gather-based oracle for the fused inference kernel."""
+    hashes = h3_hash_ref(tuples, params)                       # (B, N_f, k)
+
+    def one(h):  # (N_f, k) -> (M, N_f, k)
+        return jnp.take_along_axis(table.astype(jnp.int32), h[None], axis=2)
+
+    vals = jax.vmap(one)(hashes)                               # (B, M, N_f, k)
+    resp = jnp.min(vals, axis=-1)                              # AND for {0,1}
+    resp = resp * mask.astype(jnp.int32)[None]
+    return jnp.sum(resp, axis=-1) + bias.astype(jnp.int32)[None, :]
+
+
+def thermometer_ref(x: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
+    return (x[:, :, None] > thresholds[None]).astype(jnp.int8)
+
+
+def decompress_ref(counts: jnp.ndarray, bits: int) -> jnp.ndarray:
+    iota = jnp.arange(bits, dtype=jnp.int32)
+    return (iota[None, None, :] < counts[..., None].astype(jnp.int32)
+            ).astype(jnp.int8)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Naive softmax attention. q: (BH, Sq, D); k, v: (BH, Sk, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    sq, sk = s.shape[-2], s.shape[-1]
+    iq = jnp.arange(sq)[:, None]
+    ik = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (ik <= iq)
+    if window > 0:
+        mask = mask & (ik > iq - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""Thermometer-encoding Pallas kernel (input frontend of the accelerator).
+
+Compares a (B, F) float tile against per-feature thresholds (F, T) resident
+in VMEM, emitting the unary code as int8 bits. Also provides the accelerator
+decompression unit: unary bits from per-feature set-bit counts via an
+iota < count comparison (paper Fig. 8 left).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def thermometer_kernel(x_ref, thr_ref, out_ref):
+    x = x_ref[...]                                    # (Bt, Ft)
+    thr = thr_ref[...]                                # (Ft, T)
+    bits = (x[:, :, None] > thr[None]).astype(jnp.int8)
+    out_ref[...] = bits                               # (Bt, Ft, T)
+
+
+def thermometer_encode(x: jnp.ndarray, thresholds: jnp.ndarray, *,
+                       block_b: int = 256, block_f: int = 256,
+                       interpret: bool = False) -> jnp.ndarray:
+    """x: (B, F) f32; thresholds: (F, T) f32 -> bits (B, F, T) int8."""
+    b, f = x.shape
+    t = thresholds.shape[1]
+    block_b = min(block_b, max(8, b))
+    block_f = min(block_f, max(8, f))
+    pb, pf = (-b) % block_b, (-f) % block_f
+    if pb or pf:
+        x = jnp.pad(x, ((0, pb), (0, pf)))
+        thresholds = jnp.pad(thresholds, ((0, pf), (0, 0)),
+                             constant_values=jnp.inf)
+    bp, fp = x.shape
+
+    out = pl.pallas_call(
+        thermometer_kernel,
+        grid=(bp // block_b, fp // block_f),
+        in_specs=[
+            pl.BlockSpec((block_b, block_f), lambda i, j: (i, j)),
+            pl.BlockSpec((block_f, t), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_f, t), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, fp, t), jnp.int8),
+        interpret=interpret,
+    )(x, thresholds)
+    return out[:b, :f]
+
+
+def decompress_kernel(counts_ref, out_ref, *, bits: int):
+    c = counts_ref[...].astype(jnp.int32)             # (Bt, Ft)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (*c.shape, bits), 2)
+    out_ref[...] = (iota < c[:, :, None]).astype(jnp.int8)
+
+
+def thermometer_decompress(counts: jnp.ndarray, bits: int, *,
+                           block_b: int = 256, block_f: int = 256,
+                           interpret: bool = False) -> jnp.ndarray:
+    """counts: (B, F) uint8 -> unary bits (B, F, T) int8 (bus decompression)."""
+    b, f = counts.shape
+    block_b = min(block_b, max(8, b))
+    block_f = min(block_f, max(8, f))
+    pb, pf = (-b) % block_b, (-f) % block_f
+    if pb or pf:
+        counts = jnp.pad(counts, ((0, pb), (0, pf)))
+    bp, fp = counts.shape
+
+    out = pl.pallas_call(
+        functools.partial(decompress_kernel, bits=bits),
+        grid=(bp // block_b, fp // block_f),
+        in_specs=[pl.BlockSpec((block_b, block_f), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_b, block_f, bits),
+                               lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, fp, bits), jnp.int8),
+        interpret=interpret,
+    )(counts)
+    return out[:b, :f]

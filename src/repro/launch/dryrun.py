@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This file is the ONLY place the 512 placeholder devices exist — tests and
+# benches see the real 1-CPU backend.
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+For each cell we build the exact step function the launcher runs (train /
+prefill / decode), resolve its shardings on the production mesh, then
+
+    lowered  = jax.jit(step, in_shardings=..., donate...).lower(*specs)
+    compiled = lowered.compile()
+    compiled.memory_analysis()   # proves it fits 16 GiB/chip
+    compiled.cost_analysis()     # FLOPs / bytes for the roofline
+
+and derive the three roofline terms from the compiled artifact
+(repro/launch/hlo_cost.py). Results are written one JSON per cell to
+--out; `python -m repro.launch.report` renders EXPERIMENTS.md tables.
+
+    python -m repro.launch.dryrun --arch qwen2p5_14b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, shapes_for
+from repro.dist import sharding as sh
+from repro.launch import hlo_cost, specs, steps
+from repro.launch.mesh import make_production_mesh
+from repro.train import optimizer as opt_lib
+
+
+def lower_cell(cfg, shape, mesh, *, extra_flags: dict | None = None):
+    """Build + lower + compile one cell; returns (record, compiled)."""
+    rules = sh.TRAIN_RULES if shape.kind == "train" else sh.SERVE_RULES
+    t0 = time.time()
+    with sh.use_mesh(mesh, rules):
+        if shape.kind == "train":
+            optimizer = opt_lib.adamw(1e-4)
+            micro = specs.microbatches_for(cfg, shape, mesh)
+            step = steps.make_train_step(cfg, optimizer, microbatches=micro,
+                                         **(extra_flags or {}))
+            pspec = specs.param_specs(cfg)
+            pshard = specs.param_shardings(cfg, mesh, rules)
+            ospec = specs.opt_specs(optimizer, pspec)
+            oshard = specs.opt_shardings(cfg, optimizer, mesh, rules)
+            bspec = specs.input_specs(cfg, shape)
+            bshard = specs.input_shardings(cfg, shape, mesh, rules)
+            fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(pspec, ospec, bspec)
+        elif shape.kind == "prefill":
+            step = steps.make_prefill_step(cfg, max_len=shape.seq_len)
+            pspec = specs.param_specs(cfg, dtype=jnp.bfloat16)
+            pshard = specs.param_shardings(cfg, mesh, rules,
+                                           dtype=jnp.bfloat16)
+            bspec = specs.input_specs(cfg, shape)
+            bshard = specs.input_shardings(cfg, shape, mesh, rules)
+            # pin the returned ServeState (KV caches) to the serve
+            # shardings — left unspecified, GSPMD returned the qwen2.5
+            # 32k cache only batch-sharded: 12 GiB/chip of output
+            # (§Perf it.4c)
+            lspec, sspec = jax.eval_shape(step, pspec, bspec)
+            sshard = specs.cache_shardings(cfg, sspec, mesh, rules)
+            lshard = sh.named_sharding(mesh, rules, ("batch", None, "vocab"),
+                                       shape=lspec.shape)
+            fn = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=(lshard, sshard))
+            lowered = fn.lower(pspec, bspec)
+        else:  # decode
+            step = steps.make_decode_step(cfg)
+            pspec = specs.param_specs(cfg, dtype=jnp.bfloat16)
+            pshard = specs.param_shardings(cfg, mesh, rules,
+                                           dtype=jnp.bfloat16)
+            sspec = steps.serve_state_spec(cfg, shape.global_batch,
+                                           shape.seq_len, pspec)
+            sshard = specs.cache_shardings(cfg, sspec, mesh, rules)
+            bspec = specs.input_specs(cfg, shape)
+            bshard = specs.input_shardings(cfg, shape, mesh, rules)
+            lspec, _ = jax.eval_shape(step, pspec, bspec["token"], sspec)
+            lshard = sh.named_sharding(mesh, rules, ("batch", None, "vocab"),
+                                       shape=lspec.shape)
+            fn = jax.jit(step,
+                         in_shardings=(pshard, bshard["token"], sshard),
+                         out_shardings=(lshard, sshard),
+                         donate_argnums=(2,))
+            lowered = fn.lower(pspec, bspec["token"], sspec)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    chips = mesh.devices.size
+    mflops = hlo_cost.model_flops_for(cfg, shape)
+    roof = hlo_cost.roofline_from(compiled.as_text(), cost, chips, mflops)
+
+    record = {
+        "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+        "mesh": "x".join(str(d) for d in mesh.devices.shape),
+        "chips": chips, "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "args_gib": mem.argument_size_in_bytes / 2**30,
+            "output_gib": mem.output_size_in_bytes / 2**30,
+            "temp_gib": mem.temp_size_in_bytes / 2**30,
+            "alias_gib": mem.alias_size_in_bytes / 2**30,
+            "peak_gib": (mem.argument_size_in_bytes
+                         + mem.output_size_in_bytes
+                         + mem.temp_size_in_bytes
+                         - mem.alias_size_in_bytes) / 2**30,
+        },
+        "roofline": roof.summary(),
+    }
+    return record, compiled
+
+
+def run_uleen_cell(multi_pod: bool, out_dir: str | None) -> dict:
+    """Bonus cell: the paper's own training step on the production mesh."""
+    from repro.launch import uleen_cell
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = f"uleen_uln_l.train_mnist_scale.{'pod2' if multi_pod else 'pod1'}"
+    try:
+        t0 = time.time()
+        compiled = uleen_cell.lower_uleen_cell(mesh)
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        spec = uleen_cell.ULN_L_SPEC
+        # "model flops" for a WNN: paper-style op count (hash XORs + k
+        # lookups + popcount adds) per sample x batch — no MXU math exists.
+        ops_per_inf = sum(
+            spec.num_filters(sm) * sm.num_hashes *
+            (sm.inputs_per_filter + 1) + spec.num_filters(sm)
+            for sm in spec.submodels) * spec.num_classes
+        mflops = float(ops_per_inf * uleen_cell.GLOBAL_BATCH)
+        roof = hlo_cost.roofline_from(compiled.as_text(), cost,
+                                      mesh.devices.size, mflops)
+        record = {
+            "arch": "uleen-uln-l", "shape": "train_mnist_scale",
+            "kind": "train",
+            "mesh": "x".join(str(d) for d in mesh.devices.shape),
+            "chips": mesh.devices.size, "ok": True,
+            "lower_s": 0.0, "compile_s": round(t_compile, 2),
+            "memory": {
+                "args_gib": mem.argument_size_in_bytes / 2**30,
+                "output_gib": mem.output_size_in_bytes / 2**30,
+                "temp_gib": mem.temp_size_in_bytes / 2**30,
+                "alias_gib": mem.alias_size_in_bytes / 2**30,
+                "peak_gib": (mem.argument_size_in_bytes
+                             + mem.output_size_in_bytes
+                             + mem.temp_size_in_bytes
+                             - mem.alias_size_in_bytes) / 2**30,
+            },
+            "roofline": roof.summary(),
+        }
+        roofs = record["roofline"]
+        print(f"[dryrun] {tag}: OK compile={record['compile_s']}s "
+              f"peak={record['memory']['peak_gib']:.2f} GiB/chip "
+              f"terms(c/m/coll)={roofs['compute_s']:.3e}/"
+              f"{roofs['memory_s']:.3e}/{roofs['collective_s']:.3e} "
+              f"dominant={roofs['dominant']}")
+    except Exception as e:
+        record = {"arch": "uleen-uln-l", "shape": "train_mnist_scale",
+                  "mesh": "pod2" if multi_pod else "pod1", "ok": False,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+        print(f"[dryrun] {tag}: FAIL {record['error'][:300]}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None) -> dict:
+    if arch == "uleen":
+        return run_uleen_cell(multi_pod, out_dir)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = f"{arch}.{shape_name}.{'pod2' if multi_pod else 'pod1'}"
+    try:
+        record, compiled = lower_cell(cfg, shape, mesh)
+        mem = record["memory"]
+        roof = record["roofline"]
+        print(f"[dryrun] {tag}: OK compile={record['compile_s']}s "
+              f"peak={mem['peak_gib']:.2f} GiB/chip "
+              f"terms(c/m/coll)={roof['compute_s']:.3e}/"
+              f"{roof['memory_s']:.3e}/{roof['collective_s']:.3e} "
+              f"dominant={roof['dominant']} useful={roof['useful_ratio']:.2f}")
+    except Exception as e:
+        record = {"arch": cfg.name, "shape": shape_name,
+                  "mesh": "pod2" if multi_pod else "pod1", "ok": False,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+        print(f"[dryrun] {tag}: FAIL {record['error'][:300]}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS + ["uleen"])
+    ap.add_argument("--shape", choices=list(SHAPES) + ["train_mnist_scale"])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="every applicable (arch × shape)")
+    ap.add_argument("--out", default=None, help="JSON output dir")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shp in shapes_for(get_config(arch)):
+                cells.append((arch, shp.name))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shp in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shp, mp, args.out)
+            failures += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done: {len(cells) * len(meshes) - failures} ok, "
+          f"{failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,107 @@
+"""Render the dry-run JSON results into EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load(dir_: str) -> list:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x:.2e}"
+    return f"{x:.4f}" if x < 10 else f"{x:.2f}"
+
+
+def dryrun_table(records: list) -> str:
+    lines = ["| arch | shape | mesh | compile s | peak GiB/chip | "
+             "args GiB | fits 16G |",
+             "|---|---|---|---|---|---|---|"]
+    for r in records:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL | — | — | — |")
+            continue
+        m = r["memory"]
+        fits = "✓" if m["peak_gib"] <= 16.0 else f"✗ ({m['peak_gib']:.0f}G)"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']} | {m['peak_gib']:.2f} | "
+            f"{m['args_gib']:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def roofline_table(records: list) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL_FLOPS | useful | bound-by |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if not r.get("ok") or r.get("mesh") not in ("16x16",):
+            continue
+        roof = r["roofline"]
+        t = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        frac = roof["compute_s"] / t if t else 0.0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(roof['compute_s'])} | "
+            f"{fmt_s(roof['memory_s'])} | {fmt_s(roof['collective_s'])} | "
+            f"{roof['dominant']} | {roof['model_flops']:.2e} | "
+            f"{roof['useful_ratio']:.2f} | "
+            f"{frac:.0%} of step is MXU |")
+    return "\n".join(lines)
+
+
+def collective_summary(records: list) -> str:
+    lines = ["| arch | shape | collective | count | operand GB | link GB |",
+             "|---|---|---|---|---|---|"]
+    for r in records:
+        if not r.get("ok") or r.get("mesh") not in ("16x16",):
+            continue
+        roof = r["roofline"]
+        for kind, d in sorted(roof["collectives_by_kind"].items()):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {kind} | "
+                f"{int(d['count'])} | {d['operand_bytes'] / 1e9:.2f} | "
+                f"{d['link_bytes'] / 1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--section", choices=["dryrun", "roofline", "collective",
+                                          "all"], default="all")
+    args = ap.parse_args(argv)
+    records = load(args.dir)
+    if not records:
+        print(f"no records in {args.dir}")
+        return 1
+    if args.section in ("dryrun", "all"):
+        print("### Dry-run (lower+compile) results\n")
+        print(dryrun_table(records))
+        print()
+    if args.section in ("roofline", "all"):
+        print("### Roofline terms (single-pod 16×16, per-device)\n")
+        print(roofline_table(records))
+        print()
+    if args.section in ("collective", "all"):
+        print("### Collective breakdown (single-pod)\n")
+        print(collective_summary(records))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

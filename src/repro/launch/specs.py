@@ -1,0 +1,169 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+Everything the dry-run lowers is described here, with no device allocation:
+`input_specs` mirrors the real batch/request structures; param/optimizer/
+cache shardings come from the same logical-axis trees the runtime uses, so
+the dry-run compiles exactly the program the launcher would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist import sharding as sh
+from repro.models import transformer
+
+
+def dp_degree(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def microbatches_for(cfg: ArchConfig, shape: ShapeSpec, mesh) -> int:
+    """Grad-accumulation depth: 1 sequence per device per microbatch —
+    remat-saved activations stay O(S·D·L) per chip (fit math in DESIGN §4)."""
+    if shape.kind != "train":
+        return 1
+    return max(1, shape.global_batch // dp_degree(mesh))
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        specs = {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.encoder_layers:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    if cfg.patch_tokens and shape.kind != "decode":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.patch_tokens, cfg.d_model), jnp.float32)
+    return specs
+
+
+def input_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh, rules) -> dict:
+    specs = input_specs(cfg, shape)
+    log = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+           "token": ("batch", None), "frames": ("batch", None, None),
+           "patches": ("batch", None, None)}
+    return {k: sh.named_sharding(mesh, rules, log[k], shape=v.shape)
+            for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Parameter / optimizer specs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ArchConfig, dtype=jnp.float32):
+    return transformer.param_shapes(cfg, dtype=dtype)
+
+
+def param_shardings(cfg: ArchConfig, mesh, rules, dtype=jnp.float32):
+    shapes = param_specs(cfg, dtype)
+    logical = transformer.param_logical(cfg)
+    return sh.tree_shardings(mesh, rules, logical, shapes)
+
+
+def opt_specs(optimizer, params_like):
+    return jax.eval_shape(optimizer.init, params_like)
+
+
+def opt_shardings(cfg: ArchConfig, optimizer, mesh, rules,
+                  dtype=jnp.float32):
+    """Optimizer state mirrors parameter sharding (mu/nu trees); scalars
+    replicate."""
+    pshapes = param_specs(cfg, dtype)
+    pshard = param_shardings(cfg, mesh, rules, dtype)
+    ostate = opt_specs(optimizer, pshapes)
+
+    flat_p = {id(s): sd for s, sd in zip(jax.tree.leaves(pshapes),
+                                         jax.tree.leaves(pshard))}
+
+    def mirror(leaf):
+        # match by shape: mu/nu have the same shapes as params
+        return None
+
+    # walk: AdamState(step, mu, nu) — mu/nu structurally equal to params
+    import repro.train.optimizer as opt_lib
+    rep = sh.named_sharding(mesh, rules, ())
+    if isinstance(ostate, opt_lib.AdamState):
+        return opt_lib.AdamState(step=rep, mu=pshard, nu=pshard)
+    if isinstance(ostate, opt_lib.SGDState):
+        return opt_lib.SGDState(
+            step=rep, momentum=pshard if ostate.momentum is not None else None)
+    # generic fallback: replicate
+    return jax.tree.map(lambda _: rep, ostate)
+
+
+# ---------------------------------------------------------------------------
+# Serve-state (KV cache / SSM state) specs
+# ---------------------------------------------------------------------------
+
+def _leaf_logical(leaf_path: str, ndim: int, stacked: bool) -> tuple:
+    """Logical axes for a cache leaf, classified by its NamedTuple field."""
+    base = {
+        "k": ("batch", "kv_heads", "cache_seq", None),
+        "v": ("batch", "kv_heads", "cache_seq", None),
+        "k_scale": ("batch", "kv_heads", "cache_seq", None),
+        "v_scale": ("batch", "kv_heads", "cache_seq", None),
+        "ckv": ("batch", "cache_seq", None),
+        "krope": ("batch", "cache_seq", None),
+        "conv": ("batch", "ffn", None),
+        "state": ("batch", "heads", None, None),
+        "h": ("batch", "ffn"),
+    }[leaf_path]
+    if stacked:
+        base = (None, *base)
+    assert len(base) == ndim, (leaf_path, ndim, base)
+    return base
+
+
+def cache_shardings(cfg: ArchConfig, state_spec, mesh, rules):
+    """Shardings for a ServeState spec tree (from jax.eval_shape(prefill)).
+
+    Walks caches with jax.tree_util key paths; classifies leaves by their
+    NamedTuple field name (k/v/ckv/conv/state/h…)."""
+    import jax.tree_util as jtu
+
+    _BASE_NDIM = {"k": "bhwd", "v": "bhwd", "k_scale": "bhwd",
+                  "v_scale": "bhwd", "ckv": "bwr", "krope": "bwr",
+                  "conv": "bck", "state": "bhpn", "h": "bw"}
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        # innermost cache-NamedTuple field on the path
+        field = None
+        for p in reversed(path):
+            if isinstance(p, jtu.GetAttrKey) and p.name in _BASE_NDIM:
+                field = p.name
+                break
+        if field is None:   # pos scalar or cross (k, v) tuples
+            if leaf.ndim == 0:
+                return sh.named_sharding(mesh, rules, ())
+            if leaf.ndim >= 4:   # cross kv: (B, Hkv, F, hd), maybe stacked
+                log = (None,) * (leaf.ndim - 4) + \
+                    ("batch", "kv_heads", None, None)
+                return sh.named_sharding(mesh, rules, log, shape=leaf.shape)
+            return sh.named_sharding(mesh, rules,
+                                     ("batch",) + (None,) * (leaf.ndim - 1),
+                                     shape=leaf.shape)
+        stacked = leaf.ndim > len(_BASE_NDIM[field])
+        log = _leaf_logical(field, leaf.ndim, stacked)
+        return sh.named_sharding(mesh, rules, log, shape=leaf.shape)
+
+    return jtu.tree_map_with_path(one, state_spec)

@@ -1,0 +1,200 @@
+"""Step functions the launcher jits and the dry-run AOT-compiles.
+
+train_step: microbatched (lax.scan grad accumulation), bf16 compute with
+fp32 master weights, MoE aux loss, optimizer update — one function of
+(params, opt_state, batch), pure, shardable by in_shardings alone.
+
+prefill_step / decode_step: the serving counterparts over ServeState.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import logical_constraint
+from repro.models import transformer
+from repro.train import optimizer as opt_lib
+
+AUX_COEF = 0.01
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, tree)
+
+
+def cast_params_pinned(cfg, params, dtype):
+    """fp32 master -> compute-dtype copy, with each cast pinned to the
+    parameter's own sharding. Without the pin XLA hoists the convert past
+    the FSDP all-gather and gathers fp32 — 2x the collective bytes and a
+    full-size fp32 weight in HBM (§Perf it.3b: measured ~1 TB/step on
+    mixtral train_4k)."""
+    from repro.models import transformer
+    logical = transformer.param_logical(cfg)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_l = jax.tree.leaves(logical,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    out = []
+    for x, log in zip(flat_p, flat_l):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            x = logical_constraint(x.astype(dtype), log)
+        out.append(x)
+    return jax.tree.unflatten(treedef, out)
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels, *, frames=None,
+            patches=None, remat: bool = True):
+    """Mean next-token CE over real vocab entries (pad logits masked)."""
+    logits, aux = transformer.forward_train(cfg, params, tokens,
+                                            frames=frames, patches=patches,
+                                            remat=remat)
+    if cfg.patch_tokens:
+        logits = logits[:, cfg.patch_tokens:]
+    v = cfg.vocab_size
+    if logits.shape[-1] > v:
+        pad = jnp.full((logits.shape[-1] - v,), -1e30, logits.dtype)
+        logits = logits.at[..., v:].set(pad)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    return loss + AUX_COEF * aux, (loss, aux)
+
+
+def make_train_step(cfg: ArchConfig, optimizer: opt_lib.Optimizer, *,
+                    microbatches: int = 1,
+                    compute_dtype=jnp.bfloat16,
+                    remat: bool = True,
+                    clip_norm: float = 1.0,
+                    cross_pod_mesh=None) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradients accumulate in fp32 sharded like the parameters; the optimizer
+    runs once per global step. The microbatch loop is a lax.scan, so HLO
+    size is independent of the accumulation depth.
+
+    cross_pod_mesh: a mesh with a `pod` axis enables int8-compressed
+    cross-pod gradient reduction (partial-manual shard_map over `pod`,
+    GSPMD auto inside each pod; payload crosses the inter-pod link as
+    int8 — §Perf it.7)."""
+
+    def grads_of(params_c, mb):
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, mb["tokens"], mb["labels"],
+                              frames=mb.get("frames"),
+                              patches=mb.get("patches"), remat=remat),
+            has_aux=True)(params_c)
+        return grads, loss, aux
+
+    def local_grads(params_c, batch):
+        """Grad/loss/aux over this batch shard (microbatched)."""
+        if microbatches > 1:
+            def resplit(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mbs = {k: resplit(v) for k, v in batch.items()}
+
+            def body(acc, mb):
+                g_acc, l_acc, a_acc = acc
+                g, l, a = grads_of(params_c, mb)
+                g_acc = jax.tree.map(
+                    lambda ga, gi: ga + gi.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params_c)
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)), mbs)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            return grads, loss * inv, aux * inv
+        grads, loss, aux = grads_of(params_c, batch)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return grads, loss, aux
+
+    use_compress = (cross_pod_mesh is not None
+                    and "pod" in cross_pod_mesh.axis_names)
+
+    def train_step(params, opt_state, batch):
+        params_c = cast_params_pinned(cfg, params, compute_dtype) \
+            if compute_dtype is not None else params
+
+        if use_compress:
+            from jax.sharding import PartitionSpec as P
+            from repro.dist import sharding as shd
+            from repro.train.compression import compressed_psum
+
+            def per_pod(batch_pod):
+                # constraints inside the manual-pod region must not
+                # mention 'pod'
+                ctx = getattr(shd._STATE, "ctx", None)
+                if ctx is not None:
+                    mgr = shd.use_mesh(ctx[0], shd.strip_axis(ctx[1], "pod"))
+                else:
+                    import contextlib
+                    mgr = contextlib.nullcontext()
+                with mgr:
+                    grads, loss, aux = local_grads(params_c, batch_pod)
+                grads, _ = compressed_psum(grads, "pod")
+                return (grads, jax.lax.pmean(loss, "pod"),
+                        jax.lax.pmean(aux, "pod"))
+
+            grads, loss, aux = jax.shard_map(
+                per_pod, mesh=cross_pod_mesh, in_specs=P("pod"),
+                out_specs=P(), axis_names={"pod"},
+                check_vma=False)(batch)
+        else:
+            grads, loss, aux = local_grads(params_c, batch)
+
+        if clip_norm:
+            grads, gnorm = opt_lib.clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = opt_lib.global_norm(grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, max_len: int,
+                      compute_dtype=None) -> Callable:
+    def prefill_step(params, batch):
+        if compute_dtype is not None:
+            params = cast_tree(params, compute_dtype)
+        logits, state = transformer.forward_prefill(
+            cfg, params, batch["tokens"], max_len=max_len,
+            frames=batch.get("frames"), patches=batch.get("patches"))
+        return logits, state
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, compute_dtype=None) -> Callable:
+    def decode_step(params, token, state):
+        if compute_dtype is not None:
+            params = cast_tree(params, compute_dtype)
+        return transformer.forward_decode(cfg, params, token, state)
+    return decode_step
+
+
+def serve_state_spec(cfg: ArchConfig, batch: int, seq_len: int,
+                     param_spec) -> Any:
+    """Abstract ServeState after a seq_len prefill (for decode dry-runs):
+    eval_shape over the prefill — no arrays are built."""
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+    if cfg.encoder_layers:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    if cfg.patch_tokens:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.patch_tokens, cfg.d_model), jnp.float32)
+    step = make_prefill_step(cfg, max_len=seq_len)
+    _, state = jax.eval_shape(step, param_spec, specs)
+    return state

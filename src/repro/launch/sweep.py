@@ -1,0 +1,75 @@
+"""Run the full dry-run sweep, one subprocess per cell (isolation: each
+cell gets a fresh XLA with 512 placeholder devices; a crash or OOM in one
+cell cannot take down the sweep).
+
+    PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs.base import ARCH_IDS, get_config, shapes_for
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--archs", nargs="*", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    for arch in (args.archs or ARCH_IDS):
+        for shp in shapes_for(get_config(arch)):
+            cells.append((arch, shp.name))
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    t_start = time.time()
+    fails = []
+    for i, (arch, shp) in enumerate(cells):
+        for mesh in meshes:
+            tag = f"{arch}.{shp}.{'pod2' if mesh == 'multi' else 'pod1'}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_done and os.path.exists(path):
+                try:
+                    if json.load(open(path)).get("ok"):
+                        continue
+                except Exception:
+                    pass
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shp, "--mesh", mesh,
+                   "--out", args.out]
+            t0 = time.time()
+            try:
+                proc = subprocess.run(cmd, capture_output=True, text=True,
+                                      timeout=args.timeout)
+                ok = proc.returncode == 0
+                tail = (proc.stdout + proc.stderr).strip().splitlines()
+                msg = tail[-1][:200] if tail else ""
+            except subprocess.TimeoutExpired:
+                ok, msg = False, f"TIMEOUT {args.timeout}s"
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shp, "mesh": tag,
+                               "ok": False, "error": msg}, f)
+            if not ok:
+                fails.append(tag)
+            print(f"[sweep {i + 1}/{len(cells)} {tag}] "
+                  f"{'OK' if ok else 'FAIL'} {time.time() - t0:.0f}s  {msg}",
+                  flush=True)
+    print(f"[sweep] finished in {(time.time() - t_start) / 60:.1f} min; "
+          f"{len(fails)} failures: {fails}")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+"""The paper's own technique as a production-mesh dry-run cell.
+
+Distributed ULEEN multi-shot training step (ULN-L geometry at MNIST scale:
+784 features × 7 thermometer bits, 6 Bloom submodels): hashing (H3), the
+continuous-Bloom STE forward/backward gather/scatter, cross-entropy, and
+the Adam update — pjit-sharded batch over (pod, data), tables replicated
+(the whole continuous ensemble is ~20 MiB: WNN state is tiny; the batch is
+what scales). This is how the paper's PyTorch/GPU trainer maps onto a TPU
+fleet, and the §Perf cell where the technique itself is hill-climbed
+(gradient compression, hash recompute-vs-store).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import model as uleen
+from repro.core.model import SubmodelSpec, UleenSpec
+from repro.core.multi_shot import cross_entropy
+from repro.dist import sharding as sh
+from repro.train import optimizer as opt_lib
+
+# ULN-L geometry (paper Table I), 784 px × 7 bits.
+# dropout_shared_classes: §Perf it.5 — per-(sample, class, filter) RNG was
+# the cell's dominant HBM traffic; one mask per (sample, filter) is the
+# fleet-scale configuration.
+ULN_L_SPEC = UleenSpec(
+    num_classes=10, total_bits=784 * 7,
+    submodels=(SubmodelSpec(12, 6), SubmodelSpec(16, 7),
+               SubmodelSpec(20, 7), SubmodelSpec(24, 8),
+               SubmodelSpec(28, 8), SubmodelSpec(32, 9)),
+    bits_per_input=7, dropout_shared_classes=True, bf16_tables=True)
+
+GLOBAL_BATCH = 131072      # fleet-scale data parallelism
+
+
+def make_uleen_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer):
+    def train_step(params, opt_state, statics, bits, labels, rng):
+        statics = [uleen.SubmodelStatic(*s) for s in statics]
+
+        def loss_fn(p):
+            hashes = uleen.compute_hashes(spec, statics, bits)
+            scores = uleen.forward(spec, p, hashes, train=True, rng=rng)
+            return cross_entropy(scores, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        params = params._replace(tables=tuple(
+            jnp.clip(t, -1.0, 1.0) for t in params.tables))
+        return params, opt_state, loss
+
+    return train_step
+
+
+def uleen_cell_specs(spec: UleenSpec, mesh, *, global_batch: int = GLOBAL_BATCH):
+    """(abstract inputs, shardings) for the dry-run lowering."""
+    rules = sh.TRAIN_RULES
+    rep = sh.named_sharding(mesh, rules, ())
+
+    def table_spec(sm):
+        n_f = spec.num_filters(sm)
+        return jax.ShapeDtypeStruct((spec.num_classes, n_f, sm.entries),
+                                    jnp.float32)
+
+    params = uleen.UleenParams(
+        tables=tuple(table_spec(sm) for sm in spec.submodels),
+        bias=jax.ShapeDtypeStruct((spec.num_classes,), jnp.float32),
+        masks=tuple(jax.ShapeDtypeStruct(
+            (spec.num_classes, spec.num_filters(sm)), jnp.float32)
+            for sm in spec.submodels))
+    statics = tuple(
+        (jax.ShapeDtypeStruct((spec.num_filters(sm), sm.inputs_per_filter),
+                              jnp.int32),
+         jax.ShapeDtypeStruct((sm.num_hashes, sm.inputs_per_filter),
+                              jnp.uint32))
+        for sm in spec.submodels)
+    bits = jax.ShapeDtypeStruct((global_batch, spec.total_bits), jnp.bool_)
+    labels = jax.ShapeDtypeStruct((global_batch,), jnp.int32)
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    rep_tree = lambda t: jax.tree.map(lambda _: rep, t)
+    shardings = dict(
+        params=rep_tree(params),
+        statics=rep_tree(statics),
+        bits=sh.named_sharding(mesh, rules, ("batch", None),
+                               shape=bits.shape),
+        labels=sh.named_sharding(mesh, rules, ("batch",),
+                                 shape=labels.shape),
+        rng=rep)
+    return dict(params=params, statics=statics, bits=bits, labels=labels,
+                rng=rng), shardings
+
+
+def lower_uleen_cell(mesh, *, global_batch: int = GLOBAL_BATCH,
+                     spec: UleenSpec = ULN_L_SPEC):
+    optimizer = opt_lib.adam(1e-3)
+    step = make_uleen_train_step(spec, optimizer)
+    ins, shard = uleen_cell_specs(spec, mesh, global_batch=global_batch)
+    opt_spec = jax.eval_shape(optimizer.init, ins["params"])
+    opt_shard = jax.tree.map(lambda _: shard["params"].tables[0]
+                             if False else sh.named_sharding(
+                                 mesh, sh.TRAIN_RULES, ()), opt_spec)
+    with sh.use_mesh(mesh, sh.TRAIN_RULES):
+        fn = jax.jit(step, in_shardings=(
+            shard["params"], opt_shard, shard["statics"], shard["bits"],
+            shard["labels"], shard["rng"]), donate_argnums=(0, 1))
+        lowered = fn.lower(ins["params"], opt_spec, ins["statics"],
+                           ins["bits"], ins["labels"], ins["rng"])
+        return lowered.compile()

@@ -1,0 +1,84 @@
+"""KV caches for serving: full, ring-buffer (sliding window), int8, MLA.
+
+Caches are NamedTuples of stacked-per-layer arrays so the decode step can
+lax.scan over layers. Quantised caches store int8 payloads with per-token
+f32 scales (fit-driven: the MHA arch qwen1.5-32b needs int8 at 32k x 128
+to fit 16 GiB/chip — EXPERIMENTS §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AttnCache(NamedTuple):
+    k: jnp.ndarray                    # (B, Hkv, W, hd) bf16 or int8
+    v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray]    # (B, Hkv, W, 1) f32 if int8 else None
+    v_scale: Optional[jnp.ndarray]
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray                  # (B, W, r) compressed latent
+    krope: jnp.ndarray                # (B, W, rope_dim)
+
+
+def init_attn_cache(batch: int, kv_heads: int, window: int, head_dim: int,
+                    dtype: str = "bf16") -> AttnCache:
+    """dtype: bf16 | int8 | int4 (int4 halves int8 cache bytes again —
+    the fit lever for MHA archs at 32k; beyond-paper, EXPERIMENTS §Perf
+    it.6)."""
+    if dtype in ("int8", "int4"):
+        qdtype = jnp.int4 if dtype == "int4" else jnp.int8
+        return AttnCache(
+            k=jnp.zeros((batch, kv_heads, window, head_dim), qdtype),
+            v=jnp.zeros((batch, kv_heads, window, head_dim), qdtype),
+            k_scale=jnp.zeros((batch, kv_heads, window, 1), jnp.float32),
+            v_scale=jnp.zeros((batch, kv_heads, window, 1), jnp.float32))
+    return AttnCache(
+        k=jnp.zeros((batch, kv_heads, window, head_dim), jnp.bfloat16),
+        v=jnp.zeros((batch, kv_heads, window, head_dim), jnp.bfloat16),
+        k_scale=None, v_scale=None)
+
+
+def _quantize(x: jnp.ndarray, qdtype=jnp.int8):
+    qmax = 7.0 if qdtype == jnp.int4 else 127.0
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / qmax + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -qmax, qmax).astype(qdtype)
+    return q, scale
+
+
+def cache_write(cache: AttnCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                slots: jnp.ndarray) -> AttnCache:
+    """Write T new entries at positions `slots` (B-shared, (T,) int32)."""
+    quant = cache.k_scale is not None
+    if quant:
+        kq, ks = _quantize(k_new, cache.k.dtype)
+        vq, vs = _quantize(v_new, cache.v.dtype)
+    else:
+        kq, vq = k_new.astype(cache.k.dtype), v_new.astype(cache.v.dtype)
+    k = cache.k.at[:, :, slots].set(kq)
+    v = cache.v.at[:, :, slots].set(vq)
+    if quant:
+        return AttnCache(k, v,
+                         cache.k_scale.at[:, :, slots].set(ks),
+                         cache.v_scale.at[:, :, slots].set(vs))
+    return AttnCache(k, v, None, None)
+
+
+def cache_read(cache: AttnCache, dtype=jnp.bfloat16):
+    if cache.k_scale is not None:
+        k = cache.k.astype(jnp.float32) * cache.k_scale
+        v = cache.v.astype(jnp.float32) * cache.v_scale
+        return k.astype(dtype), v.astype(dtype)
+    return cache.k.astype(dtype), cache.v.astype(dtype)
+
+
+def init_mla_cache(batch: int, window: int, lora_rank: int,
+                   rope_dim: int) -> MLACache:
+    return MLACache(ckv=jnp.zeros((batch, window, lora_rank), jnp.bfloat16),
+                    krope=jnp.zeros((batch, window, rope_dim), jnp.bfloat16))

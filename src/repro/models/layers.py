@@ -1,0 +1,257 @@
+"""Transformer building blocks: norms, RoPE, MLP, attention (GQA/MHA/MLA).
+
+All functions are pure; params are nested dicts of arrays. Attention for
+training/prefill uses a chunked-KV streaming softmax (flash-style, pure XLA:
+lax.scan over key blocks with running max/denominator) so S x S score
+matrices are never materialised; decode attends over the cache directly.
+The Pallas kernel in repro/kernels/flash_attention.py is the TPU drop-in for
+the same math (kernels don't lower on the CPU/dry-run backend).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical_constraint
+
+DEFAULT_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / embeddings
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def sinusoidal_positions(seq: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, dim, 2) / dim)
+    ang = pos * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp(cfg, p, x):
+    """SwiGLU (w1/w3 gate) or GELU (w1 only), per cfg.act."""
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = x @ p["w1"]
+        if "b1" in p:
+            h = h + p["b1"]
+        h = jax.nn.gelu(h)
+    h = logical_constraint(h, ("batch", "seq", "ffn"))
+    out = h @ p["w2"]
+    if "b2" in p:
+        out = out + p["b2"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Streaming-softmax attention core
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, window: int = 0,
+                      q_offset: int = 0,
+                      kv_len: Optional[jnp.ndarray] = None,
+                      chunk: int = DEFAULT_CHUNK,
+                      scale: Optional[float] = None,
+                      remat_body: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
+
+    GQA folded in (Hq = G * Hkv): q reshaped to (B, Hkv, G, Sq, D) so scores
+    contract against shared KV without materialising repeated keys.
+    lax.scan over Sk chunks carries (m, l, acc) — flash attention in XLA.
+
+    remat_body checkpoints each chunk step so the scan transpose never
+    stores the (Sq, chunk) score/probability blocks: backward recomputes
+    them, exactly like the flash-attention backward on real TPU hardware.
+    Without it the bwd HBM traffic is O(S²) per layer (measured 5.5×
+    memory-term inflation at S=4096 — EXPERIMENTS §Perf, iteration 1).
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, sq, d)
+
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = k.reshape(b, hkv, nchunks, chunk, d)
+    vc = v.reshape(b, hkv, nchunks, chunk, dv)
+
+    iq = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, j = xs                       # (B, Hkv, C, D), (...), scalar
+        # f32 accumulate via preferred_element_type — no materialised f32
+        # copies of Q/K/V (the TPU flash kernel's dtype discipline; §Perf
+        # it.4: the astype path doubled serve-path HBM traffic).
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        ik = j * chunk + jnp.arange(chunk)
+        mask = ik[None, :] < (kv_len if kv_len is not None else sk)
+        mask = jnp.broadcast_to(mask, (sq, chunk))
+        if causal:
+            mask = mask & (ik[None, :] <= iq[:, None])
+        if window > 0:
+            mask = mask & (ik[None, :] > iq[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhgqc,bhcd->bhgqd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    if remat_body:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    m0 = jnp.full((b, hkv, g, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0),
+         jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-20)
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def banded_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     window: int, q_block: int = DEFAULT_CHUNK,
+                     scale: Optional[float] = None,
+                     remat_body: bool = True) -> jnp.ndarray:
+    """Sliding-window attention that only TOUCHES the band.
+
+    chunked_attention scans every KV chunk and masks — O(S²) score FLOPs
+    even when the window w ≪ S. Here queries go in blocks of q_block and
+    each block dynamic-slices exactly its (w + q_block) KV band:
+    O(S·(w+qb)) FLOPs/traffic — ~7× less for mixtral prefill_32k
+    (w=4096, S=32768). §Perf it.8. Only safe when q is not
+    sequence-sharded (mixtral's 32 heads divide the model axis, so q is
+    head-sharded — cfg.banded_swa gates it per arch).
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    q_block = min(q_block, sq)
+    band = window + q_block          # kv span a q block can see
+    nq = -(-sq // q_block)
+    pq = nq * q_block - sq
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    # pad kv: `band` in front and up to nq*q_block behind, so no block's
+    # dynamic_slice ever clamps (a clamped start silently shifts the band)
+    back = nq * q_block - sk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (band, back), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (band, back), (0, 0)))
+    qg = q.reshape(b, hkv, g, nq, q_block, d)
+
+    def body(_, qi):
+        qs = qi * q_block                       # absolute block start
+        s0 = qs + q_block - band                # absolute band start
+        kb = jax.lax.dynamic_slice(
+            kp, (0, 0, s0 + band, 0), (b, hkv, band, d))
+        vb = jax.lax.dynamic_slice(
+            vp, (0, 0, s0 + band, 0), (b, hkv, band, dv))
+        qb_ = jax.lax.dynamic_index_in_dim(qg, qi, axis=3, keepdims=False)
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", qb_, kb,
+                       preferred_element_type=jnp.float32) * scale
+        iq = qs + jnp.arange(q_block)
+        ik = s0 + jnp.arange(band)
+        mask = (ik[None, :] >= 0) & (ik[None, :] < sk) \
+            & (ik[None, :] <= iq[:, None]) \
+            & (ik[None, :] > iq[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqc,bhcd->bhgqd", p.astype(v.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        return None, out.astype(q.dtype)
+
+    if remat_body:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, blocks = jax.lax.scan(body, None, jnp.arange(nq))
+    out = jnp.moveaxis(blocks, 0, 3)            # (B, Hkv, G, nq, qb, D)
+    out = out.reshape(b, hq, nq * q_block, dv)[:, :, :sq]
+    return out
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     kv_len: jnp.ndarray, window: int = 0,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-step decode: q (B, Hq, 1, D) over the full cache (no loop)."""
+    b, hq, _, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    ik = jnp.arange(sk)
+    mask = ik[None, :] < kv_len[:, None]                    # (B, Sk)
+    if window > 0:
+        mask = mask & (ik[None, :] > kv_len[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, 1, dv).astype(q.dtype)

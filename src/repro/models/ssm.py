@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD: state-space duality) blocks, chunked for TPU.
+
+The sequence is processed in chunks of Q tokens inside one lax.scan carrying
+the (H, P, N) inter-chunk state, so nothing quadratic in S is materialised:
+per chunk we form the Q x Q lower-triangular decay ("intra-chunk attention"),
+the chunk's contribution to the running state, and the state's contribution
+to the chunk's output (Dao & Gu 2024, minimal-SSD formulation).
+
+Decode is the O(1) recurrent update: state = state * exp(dt*A) + dt * x B^T.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical_constraint
+from repro.models.layers import rmsnorm
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., Q) -> (..., Q, Q) lower-tri cumulative sums: sum_{j<i<=k}."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(x, dt, a, b, c, d_skip, *, chunk: int,
+             remat_body: bool = True):
+    """SSD forward.
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,) (negative);
+    b, c: (B, S, G, N); d_skip: (H,) -> y (B, S, H, P).
+
+    remat_body checkpoints each chunk step so the backward pass recomputes
+    the (Q, Q) intra-chunk decay/score blocks instead of storing them
+    stacked across chunks (same O(S·Q) vs O(S²/..) traffic argument as
+    chunked_attention — EXPERIMENTS §Perf).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        # dt=0 padding is exact: decay exp(0·a)=1 keeps the state, and the
+        # padded tokens contribute dt·x·Bᵀ = 0 to it.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, g, n)
+    cc = c.reshape(bsz, nc, chunk, g, n)
+
+    def body(state, xs):
+        xq, dtq, bq, cq = xs                 # (B, Q, H, P), (B, Q, H), ...
+        # per-chunk f32 upcast: full-sequence f32 copies of x/dt/B/C would
+        # double the stream's HBM traffic (§Perf it.4)
+        xq = xq.astype(jnp.float32)
+        dtq = dtq.astype(jnp.float32)
+        bq = bq.astype(jnp.float32)
+        cq = cq.astype(jnp.float32)
+        da = dtq * a                          # (B, Q, H)
+        # intra-chunk: L[i,j] = exp(sum_{j<k<=i} da_k)
+        ll = jnp.exp(_segsum(jnp.moveaxis(da, 1, 2)))       # (B, H, Q, Q)
+        bqh = jnp.repeat(bq, rep, axis=2)                   # (B, Q, H, N)
+        cqh = jnp.repeat(cq, rep, axis=2)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", cqh, bqh)    # (B, H, Q, Q)
+        y_diag = jnp.einsum("bhqk,bkh,bkhp->bqhp",
+                            scores * ll, dtq, xq)
+        # state -> output (inter-chunk)
+        decay_in = jnp.exp(jnp.cumsum(da, axis=1))          # (B, Q, H)
+        y_off = jnp.einsum("bqhn,bhpn,bqh->bqhp", cqh, state, decay_in)
+        # chunk -> new state
+        total = jnp.sum(da, axis=1, keepdims=True)          # (B, 1, H)
+        decay_out = jnp.exp(total - jnp.cumsum(da, axis=1))  # (B, Q, H)
+        state_new = state * jnp.exp(total[:, 0])[..., None, None] + \
+            jnp.einsum("bqhn,bqh,bqhp->bhpn", bqh, dtq * decay_out, xq)
+        return state_new, (y_diag + y_off).astype(x.dtype)
+
+    if remat_body:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    state_fin, yc = jax.lax.scan(
+        body, state0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(bsz, sp, h, p)[:, :s]
+    x = x[:, :s]
+    skip = d_skip[None, None, :, None].astype(x.dtype)
+    return (y + x * skip).astype(x.dtype), state_fin
+
+
+def ssd_decode_step(state, x, dt, a, b, c, d_skip):
+    """One-token recurrence. state: (B, H, P, N); x: (B, H, P);
+    dt: (B, H); b, c: (B, G, N) -> (state', y (B, H, P))."""
+    h = x.shape[1]
+    g = b.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=1)                         # (B, H, N)
+    ch = jnp.repeat(c, rep, axis=1)
+    da = jnp.exp(dt * a)                                    # (B, H)
+    state = state * da[..., None, None] + \
+        jnp.einsum("bh,bhp,bhn->bhpn", dt, x, bh)
+    y = jnp.einsum("bhn,bhpn->bhp", ch, state)
+    return state, (y + x * d_skip[None, :, None]).astype(x.dtype)
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray    # (B, conv_dim, K-1) rolling conv window
+    state: jnp.ndarray   # (B, H, P, N)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray):
+    """x: (B, S, C); w: (K, C) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(k))
+    return out + bias[None, None]
+
+
+def mamba2_block(cfg, p, x: jnp.ndarray, *, return_state: bool = False):
+    """Full Mamba-2 mixer. x: (B, S, D) -> (B, S, D) [, SSMState at S-1]."""
+    bsz, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    hdim = cfg.ssm_head_dim
+    nh = d_in // hdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    k = cfg.conv_kernel
+
+    zxbcdt = x @ p["in_proj"]                               # (B, S, ...)
+    z, xs, bc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + 2 * g * n], axis=-1)
+    xbc_raw = jnp.concatenate([xs, bc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xs = logical_constraint(xs, ("batch", "seq", "ffn"))
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None])     # (B, S, H)
+    a = -jnp.exp(p["a_log"])                                # (H,)
+
+    y, state_fin = ssd_scan(xs.reshape(bsz, s, nh, hdim), dt, a,
+                            b.reshape(bsz, s, g, n), c.reshape(bsz, s, g, n),
+                            p["d_skip"], chunk=cfg.ssm_chunk,
+                            remat_body=cfg.inner_remat)
+    y = y.reshape(bsz, s, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ p["out_proj"]
+    if return_state:
+        conv = jnp.moveaxis(xbc_raw[:, s - (k - 1):, :], 1, 2)  # (B, C, K-1)
+        return out, SSMState(conv=conv, state=state_fin)
+    return out
+
+
+def mamba2_decode(cfg, p, x: jnp.ndarray, cache: SSMState):
+    """x: (B, 1, D) -> (y (B, 1, D), cache')."""
+    bsz, _, d = x.shape
+    d_in = cfg.ssm_expand * d
+    hdim = cfg.ssm_head_dim
+    nh = d_in // hdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    k = cfg.conv_kernel
+
+    zxbcdt = (x[:, 0] @ p["in_proj"])                       # (B, ...)
+    z, xs, bc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + 2 * g * n], axis=-1)
+    xbc = jnp.concatenate([xs, bc], axis=-1)                # (B, conv_dim)
+    window = jnp.concatenate([cache.conv, xbc[:, :, None]], axis=-1)  # K wide
+    conv_out = jnp.einsum("bck,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    xs, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None])
+    a = -jnp.exp(p["a_log"])
+    state, y = ssd_decode_step(
+        cache.state, xs.reshape(bsz, nh, hdim).astype(jnp.float32),
+        dt.astype(jnp.float32), a,
+        b.reshape(bsz, g, n).astype(jnp.float32),
+        c.reshape(bsz, g, n).astype(jnp.float32), p["d_skip"])
+    y = y.reshape(bsz, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = (y @ p["out_proj"])[:, None]
+    return out, SSMState(conv=window[:, :, 1:], state=state)
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> SSMState:
+    d_in = cfg.ssm_expand * cfg.d_model
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    return SSMState(
+        conv=jnp.zeros((batch, conv_dim, cfg.conv_kernel - 1), dtype),
+        state=jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                        jnp.float32))

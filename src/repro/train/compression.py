@@ -1,0 +1,82 @@
+"""Gradient compression for the cross-pod data-parallel reduction.
+
+Intra-pod gradient reduce-scatter rides the fast ICI mesh and stays full
+precision; the *cross-pod* hop (DCN on a real fleet) is the scarce resource,
+so gradients cross it int8-quantised (per-tensor scale, stochastic-rounding
+optional, error feedback carried between steps).
+
+Usage inside a shard_map'd train step over the `pod` axis:
+
+    grads, err = compressed_psum(grads, "pod", err_state)
+
+The scale is agreed with one tiny fp32 all-reduce (max |g|), then payloads
+cross as int8 and are summed in int32 — an 8x cut of cross-pod bytes
+(EXPERIMENTS §Perf quantifies the collective-term change).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _q8(x: jnp.ndarray, scale: jnp.ndarray, rng=None) -> jnp.ndarray:
+    y = x / scale
+    if rng is not None:
+        y = y + jax.random.uniform(rng, y.shape, y.dtype, -0.5, 0.5)
+    return jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+
+
+def compressed_psum_leaf(g: jnp.ndarray, axis: str,
+                         err: Optional[jnp.ndarray] = None,
+                         rng=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8 mean of one gradient tensor across `axis`, with error feedback.
+
+    The payload crosses the wire as int8 (all-gather + local int32 sum):
+    a psum of int32-upcast payloads would put 4 B/elem back on the link
+    and erase the compression. One fp32 scalar (the shared scale) is the
+    only fp32 traffic."""
+    g32 = g.astype(jnp.float32)
+    if err is not None:
+        g32 = g32 + err
+    absmax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = _q8(g32, scale, rng)
+    gathered = jax.lax.all_gather(q, axis)            # int8 on the wire
+    total = jnp.sum(gathered.astype(jnp.int32), axis=0)
+    n = gathered.shape[0]
+    mean = total.astype(jnp.float32) * scale / n
+    new_err = g32 - q.astype(jnp.float32) * scale     # local residual
+    return mean.astype(g.dtype), new_err
+
+
+def compressed_psum(grads: Any, axis: str, err_state: Optional[Any] = None
+                    ) -> Tuple[Any, Any]:
+    """Tree version. err_state=None initialises error feedback to zero."""
+    if err_state is None:
+        err_state = jax.tree.map(lambda _: None, grads,
+                                 is_leaf=lambda x: x is None)
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(err_state) if jax.tree.leaves(err_state) else \
+        [None] * len(leaves)
+    if len(errs) != len(leaves):
+        errs = [None] * len(leaves)
+    outs, new_errs = [], []
+    for g, e in zip(leaves, errs):
+        o, ne = compressed_psum_leaf(g, axis, e)
+        outs.append(o)
+        new_errs.append(ne)
+    return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef,
+                                                                 new_errs)
+
+
+def cross_pod_bytes(grads: Any, compressed: bool) -> int:
+    """Accounting helper for the roofline's collective term."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = 1
+        for d in g.shape:
+            n *= d
+        total += n * (1 if compressed else 4) + (4 if compressed else 0)
+    return total

@@ -1,0 +1,90 @@
+"""Fault tolerance: preemption handling, restart, straggler mitigation.
+
+* PreemptionGuard — SIGTERM/SIGINT set a flag; the train loop checkpoints at
+  the next step boundary and exits cleanly (restart resumes via
+  checkpoint.restore_latest).
+* StragglerMonitor — per-step wall-time EWMA; steps slower than
+  `threshold x` the EWMA are flagged. On a real fleet the launcher feeds
+  this into its replacement policy (hot-spare swap + elastic re-mesh); here
+  it raises structured events the trainer logs and tests assert on.
+* ElasticMesh notes — checkpoints are mesh-agnostic (logical arrays), and
+  `make_production_mesh` is a function of the live pod count, so a restart
+  after losing a pod re-shards the same checkpoint onto the smaller mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Optional
+
+
+class PreemptionGuard:
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._requested = False
+        self._signals = signals
+        self._prev = {}
+
+    def __enter__(self):
+        for sig in self._signals:
+            self._prev[sig] = signal.signal(sig, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
+        return False
+
+    def _handler(self, signum, frame):
+        self._requested = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested
+
+    def request(self) -> None:   # test hook
+        self._requested = True
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ewma: float
+    ratio: float
+
+
+class StragglerMonitor:
+    """Flags steps (or, per-host on a fleet, participants) that run slower
+    than `threshold` x the EWMA step time."""
+
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
+                 warmup_steps: int = 3,
+                 on_straggler: Optional[Callable] = None):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup_steps
+        self.ewma: Optional[float] = None
+        self.events: list = []
+        self._on = on_straggler
+        self._seen = 0
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> Optional[StragglerEvent]:
+        dt = time.monotonic() - self._t0
+        self._seen += 1
+        ev = None
+        if self.ewma is None:
+            self.ewma = dt
+        else:
+            if self._seen > self.warmup and dt > self.threshold * self.ewma:
+                ev = StragglerEvent(step=step, duration=dt, ewma=self.ewma,
+                                    ratio=dt / self.ewma)
+                self.events.append(ev)
+                if self._on:
+                    self._on(ev)
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return ev

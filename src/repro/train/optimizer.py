@@ -1,0 +1,179 @@
+"""Optimizers and schedules, from scratch (no optax offline).
+
+Minimal optax-like API:
+    opt = adamw(lr=1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All transforms are pure pytree->pytree functions, jit/pjit friendly: states
+are pytrees of arrays, so they shard with the same PartitionSpec rules as the
+parameters they mirror (FSDP-compatible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)) if p is not None else None,
+                        params, updates)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+def constant_schedule(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def warmup_cosine_schedule(peak: float, warmup_steps: int, total_steps: int,
+                           floor: float = 0.0) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup_steps)
+        frac = jnp.clip((step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def linear_warmup_schedule(peak: float, warmup_steps: int) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        return peak * jnp.minimum(1.0, step / jnp.maximum(1.0, warmup_steps))
+    return sched
+
+
+def _as_schedule(lr) -> Schedule:
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# --------------------------------------------------------------------------
+# Optimizers
+# --------------------------------------------------------------------------
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Optional[PyTree]
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    lr = _as_schedule(lr)
+
+    def init(params):
+        mom = _tree_zeros_like(params) if momentum else None
+        return SGDState(jnp.zeros([], jnp.int32), mom)
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = lr(state.step)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+            if nesterov:
+                upd = jax.tree.map(lambda m, g: -(lr_t) * (momentum * m + g), mom, grads)
+            else:
+                upd = jax.tree.map(lambda m: -(lr_t) * m, mom)
+            return upd, SGDState(step, mom)
+        upd = jax.tree.map(lambda g: -(lr_t) * g, grads)
+        return upd, SGDState(step, None)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, mu_dtype=jnp.float32) -> Optimizer:
+    """Adam / AdamW (decoupled weight decay when weight_decay > 0)."""
+    lr = _as_schedule(lr)
+
+    def init(params):
+        return AdamState(jnp.zeros([], jnp.int32),
+                         _tree_zeros_like(params, mu_dtype),
+                         _tree_zeros_like(params, jnp.float32))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = lr(state.step)
+        stepf = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def upd_mu(m, g):
+            return b1 * m + (1.0 - b1) * g.astype(m.dtype)
+
+        def upd_nu(v, g):
+            g32 = g.astype(jnp.float32)
+            return b2 * v + (1.0 - b2) * g32 * g32
+
+        mu = jax.tree.map(upd_mu, state.mu, grads)
+        nu = jax.tree.map(upd_nu, state.nu, grads)
+
+        def step_fn(m, v, p):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v / bc2
+            u = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            upd = jax.tree.map(lambda m, v: step_fn(m, v, None), mu, nu)
+        else:
+            upd = jax.tree.map(step_fn, mu, nu, params)
+        return upd, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, mu_dtype=jnp.float32) -> Optimizer:
+    return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, mu_dtype=mu_dtype)
+
+
+def chain_clip(optimizer: Optimizer, max_norm: float) -> Optimizer:
+    """Global-norm clipping composed in front of an optimizer."""
+
+    def init(params):
+        return optimizer.init(params)
+
+    def update(grads, state, params=None):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return optimizer.update(grads, state, params)
+
+    return Optimizer(init, update)

@@ -1,0 +1,40 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.model import SubmodelSpec, UleenSpec, init_params, init_static
+from repro.data.synth import make_mnist_like
+
+
+@pytest.fixture(scope="session")
+def tiny_data():
+    """16x16 mnist-like. Sized at 2000 train samples: below ~1.5k the
+    one-shot rule is still competitive; the paper's multi-shot > one-shot
+    crossover needs enough data that counting tables saturate (§V-E)."""
+    return make_mnist_like(jax.random.PRNGKey(0), n_train=2000, n_test=400,
+                           hw=16)
+
+
+@pytest.fixture(scope="session")
+def tiny_spec():
+    return UleenSpec(num_classes=10, total_bits=512,
+                     submodels=(SubmodelSpec(12, 6), SubmodelSpec(16, 6)),
+                     bits_per_input=2)
+
+
+@pytest.fixture(scope="session")
+def tiny_statics(tiny_spec):
+    return init_static(jax.random.PRNGKey(1), tiny_spec)
+
+
+@pytest.fixture()
+def tiny_params(tiny_spec):
+    return init_params(jax.random.PRNGKey(2), tiny_spec, init_scale=0.1)
+
+
+@pytest.fixture(scope="session")
+def encoded(tiny_data):
+    from repro.core.encoding import fit_gaussian_thermometer
+    enc = fit_gaussian_thermometer(tiny_data.x_train, 2)
+    return (enc.encode(tiny_data.x_train), tiny_data.y_train,
+            enc.encode(tiny_data.x_test), tiny_data.y_test)

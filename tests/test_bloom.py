@@ -1,0 +1,99 @@
+"""Bloom-filter RAM-node tests (ULEEN §III-A1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bloom
+
+
+def _tables(key, m=3, n_f=4, e=16, dtype=jnp.float32):
+    return jax.random.uniform(key, (m, n_f, e), dtype, -1.0, 1.0)
+
+
+def test_gather_reuses_hashes_across_classes():
+    """The same hash indices index every class's table — the paper's shared
+    input order + shared H3 parameters."""
+    key = jax.random.PRNGKey(0)
+    table = _tables(key)
+    h = jax.random.randint(jax.random.PRNGKey(1), (5, 4, 2), 0, 16)
+    vals = bloom.gather_filter_values(table, h)
+    assert vals.shape == (5, 3, 4, 2)
+    for c in range(3):
+        expect = np.take_along_axis(np.asarray(table[c]), np.asarray(h[0]),
+                                    axis=1)
+        np.testing.assert_allclose(np.asarray(vals[0, c]), expect)
+
+
+def test_ste_forward_is_step():
+    x = jnp.array([-1.0, -0.1, 0.0, 0.3, 2.0])
+    np.testing.assert_array_equal(np.asarray(bloom.ste_step(x)),
+                                  [0.0, 0.0, 1.0, 1.0, 1.0])
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(bloom.ste_step(x) * 3.0))(
+        jnp.array([-0.5, 0.5]))
+    np.testing.assert_allclose(np.asarray(g), [3.0, 3.0])
+
+
+def test_continuous_response_gradient_routes_to_min_entry():
+    """Autodiff through min must scatter the gradient to exactly the
+    accessed minimum entry (the paper's gather/scatter training)."""
+    table = jnp.array([[[0.5, -0.2, 0.9, 0.1]]])   # (1 class, 1 filter, 4)
+    h = jnp.array([[[0, 3]]])                      # accesses 0.5 and 0.1
+    g = jax.grad(lambda t: jnp.sum(
+        bloom.continuous_filter_response(t, h)))(table)
+    np.testing.assert_allclose(np.asarray(g[0, 0]), [0, 0, 0, 1.0])
+
+
+def test_counting_increment_min_rule():
+    """Only the smallest accessed counter(s) increment, all on ties."""
+    table = jnp.zeros((2, 1, 8), jnp.int32)
+    h = jnp.array([[1, 5]])
+    t1 = bloom.counting_increment(table, h, jnp.asarray(0))
+    # both zero -> tie -> both increment
+    assert int(t1[0, 0, 1]) == 1 and int(t1[0, 0, 5]) == 1
+    assert int(t1[1].sum()) == 0, "wrong class untouched"
+    t1 = t1.at[0, 0, 1].set(5)
+    t2 = bloom.counting_increment(t1, h, jnp.asarray(0))
+    assert int(t2[0, 0, 5]) == 2 and int(t2[0, 0, 1]) == 5, \
+        "only the min counter increments"
+
+
+def test_bleaching_threshold_semantics():
+    table = jnp.array([[[0, 1, 2, 3]]], jnp.int32)
+    for b in range(1, 4):
+        bin_ = bloom.binarize_counting(table, jnp.asarray(b))
+        np.testing.assert_array_equal(np.asarray(bin_[0, 0]),
+                                      np.arange(4) >= b)
+
+
+def test_no_false_negatives():
+    """A trained pattern is always recognised (Bloom filters only err
+    towards false positives)."""
+    key = jax.random.PRNGKey(2)
+    table = jnp.zeros((1, 6, 32), jnp.int32)
+    hashes = jax.random.randint(key, (20, 6, 2), 0, 32)
+    for i in range(20):
+        table = bloom.counting_increment(table, hashes[i], jnp.asarray(0))
+    binary = bloom.binarize_counting(table, jnp.asarray(1))
+    resp = bloom.binary_filter_response(binary, hashes)
+    assert bool(jnp.all(resp)), "every trained pattern must respond 1"
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.floats(0.05, 0.5))
+def test_fpr_monotone_in_load(seed, k, load):
+    """Analytic FPR grows with the number of stored items."""
+    f1 = bloom.false_positive_rate(int(load * 256), 256, k)
+    f2 = bloom.false_positive_rate(int(load * 256) + 64, 256, k)
+    assert f2 >= f1
+
+
+def test_binarize_continuous():
+    t = jnp.array([[-0.5, 0.0, 0.5]])
+    np.testing.assert_array_equal(np.asarray(bloom.binarize_continuous(t)),
+                                  [[False, True, True]])

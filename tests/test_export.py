@@ -1,0 +1,115 @@
+"""Export / deployment-artifact tests (bit-packing, save/load, hw model)."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import export as ex
+from repro.core import hwmodel
+from repro.core.model import binarize_params, compute_hashes, forward_binary
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 5), st.integers(1, 9), st.integers(0, 3))
+def test_pack_unpack_roundtrip(m, n_f, log_extra):
+    e = 32 * (2 ** log_extra)
+    rng = np.random.default_rng(m * 100 + n_f)
+    table = rng.random((m, n_f, e)) < 0.4
+    packed = ex.pack_table(table)
+    assert packed.shape == (m, n_f, e // 32)
+    np.testing.assert_array_equal(ex.unpack_table(packed, e), table)
+
+
+def test_export_preserves_inference(tiny_spec, tiny_statics, tiny_params,
+                                    encoded):
+    bits_tr, *_ = encoded
+    art = ex.export_model(tiny_spec, tiny_statics, tiny_params)
+    h = compute_hashes(tiny_spec, tiny_statics, bits_tr[:32])
+    tables_bin, masks, bias = binarize_params(tiny_params)
+    expect = forward_binary(tiny_spec, tables_bin, masks, bias, h)
+    # reconstruct from the packed artifact
+    got = jnp.zeros_like(expect)
+    for i, sm in enumerate(art.submodels):
+        table = jnp.asarray(ex.unpack_table(sm.packed, sm.entries))
+        from repro.core import bloom
+        resp = bloom.binary_filter_response(table, h[i])
+        resp = resp & jnp.asarray(sm.mask)[None]
+        got = got + jnp.sum(resp, axis=-1, dtype=jnp.int32)
+    got = got + jnp.asarray(art.bias)[None]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_save_load_roundtrip(tmp_path, tiny_spec, tiny_statics, tiny_params):
+    art = ex.export_model(tiny_spec, tiny_statics, tiny_params)
+    path = os.path.join(tmp_path, "model.npz")
+    ex.save(art, path)
+    back = ex.load(path)
+    assert back.num_classes == art.num_classes
+    assert back.size_kib == pytest.approx(art.size_kib)
+    for a, b in zip(art.submodels, back.submodels):
+        np.testing.assert_array_equal(a.packed, b.packed)
+        np.testing.assert_array_equal(a.perm, b.perm)
+
+
+def test_size_accounting(tiny_spec, tiny_statics, tiny_params):
+    art = ex.export_model(tiny_spec, tiny_statics, tiny_params)
+    assert art.size_kib == pytest.approx(tiny_spec.size_kib(), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Analytical hardware model: must reproduce the paper's published numbers
+# ---------------------------------------------------------------------------
+
+def test_hw_throughput_matches_paper_fpga():
+    """Bus-bound II reproduces Table II exactly: ULN-S/M 14,286 kIPS at
+    200 MHz / 112-bit bus; ULN-L 4,070 kIPS at 85 MHz."""
+    plats = hwmodel.calibrated_platforms()
+    r_s = hwmodel.evaluate_design(hwmodel.ULN_S, plats["fpga"])
+    r_m = hwmodel.evaluate_design(hwmodel.ULN_M, plats["fpga"])
+    r_l = hwmodel.evaluate_design(hwmodel.ULN_L, plats["fpga@85"])
+    assert r_s.throughput_kips == pytest.approx(14286, rel=0.01)
+    assert r_m.throughput_kips == pytest.approx(14286, rel=0.01)
+    assert r_l.throughput_kips == pytest.approx(4070, rel=0.02)
+
+
+def test_hw_throughput_matches_paper_asic():
+    """Table III: ULN-S/M 55,556 kIPS; ULN-L 38,462 kIPS at 500 MHz/192b."""
+    plats = hwmodel.calibrated_platforms()
+    r_s = hwmodel.evaluate_design(hwmodel.ULN_S, plats["asic"])
+    r_l = hwmodel.evaluate_design(hwmodel.ULN_L, plats["asic"])
+    assert r_s.throughput_kips == pytest.approx(55556, rel=0.01)
+    assert r_l.throughput_kips == pytest.approx(38462, rel=0.01)
+
+
+def test_hw_power_calibration_recovers_paper_points():
+    """The calibrated per-op energies must reproduce the three published
+    power numbers they were fitted to (within fit tolerance)."""
+    plats = hwmodel.calibrated_platforms()
+    for counts, plat_key, watts in [
+            (hwmodel.ULN_S, "fpga", 1.1), (hwmodel.ULN_M, "fpga", 3.1),
+            (hwmodel.ULN_S, "asic", 0.84), (hwmodel.ULN_M, "asic", 2.58),
+            (hwmodel.ULN_L, "asic", 6.23)]:
+        r = hwmodel.evaluate_design(counts, plats[plat_key])
+        assert r.power_w == pytest.approx(watts, rel=0.25), \
+            f"{plat_key} calibration off: {r.power_w} vs {watts}"
+
+
+def test_hw_latency_magnitude():
+    """Paper reports 0.21–0.94 µs FPGA latencies; the pipeline-depth model
+    must land in that order of magnitude."""
+    plats = hwmodel.calibrated_platforms()
+    r = hwmodel.evaluate_design(hwmodel.ULN_S, plats["fpga"])
+    assert 0.05 < r.latency_us < 1.0
+
+
+def test_hw_energy_ordering():
+    """Bigger models burn more energy per inference on the same platform."""
+    plats = hwmodel.calibrated_platforms()
+    e = [hwmodel.evaluate_design(c, plats["asic"]).energy_uj_steady
+         for c in (hwmodel.ULN_S, hwmodel.ULN_M, hwmodel.ULN_L)]
+    assert e[0] < e[1] < e[2]

@@ -1,0 +1,83 @@
+"""H3 hash family tests (ULEEN §III-A1; Carter–Wegman)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hashing import (h3_hash, make_h3_params, murmur_double_hash,
+                                pack_bits_u32)
+
+
+def test_h3_range():
+    key = jax.random.PRNGKey(0)
+    params = make_h3_params(key, 3, 16, 7)
+    bits = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (64, 16))
+    h = h3_hash(bits, params)
+    assert h.shape == (64, 3)
+    assert (np.asarray(h) >= 0).all() and (np.asarray(h) < 128).all()
+
+
+def test_h3_deterministic():
+    params = make_h3_params(jax.random.PRNGKey(0), 2, 12, 6)
+    bits = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (8, 12))
+    np.testing.assert_array_equal(np.asarray(h3_hash(bits, params)),
+                                  np.asarray(h3_hash(bits, params)))
+
+
+def test_h3_zero_input_hashes_to_zero():
+    """XOR over the empty set: the all-zeros tuple maps to index 0 — a
+    structural property the hardware exploits (no hash units fire)."""
+    params = make_h3_params(jax.random.PRNGKey(0), 2, 10, 6)
+    h = h3_hash(jnp.zeros((1, 10), bool), params)
+    assert (np.asarray(h) == 0).all()
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 2**31 - 1))
+def test_h3_xor_linearity(seed):
+    """h(a XOR b) == h(a) XOR h(b): H3 is linear over GF(2) — the property
+    that makes it computable by pure AND/XOR trees in the paper's hardware."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = make_h3_params(k1, 2, 14, 8)
+    a = jax.random.bernoulli(k2, 0.5, (5, 14))
+    b = jax.random.bernoulli(k3, 0.5, (5, 14))
+    lhs = h3_hash(jnp.logical_xor(a, b), params)
+    rhs = h3_hash(a, params) ^ h3_hash(b, params)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+def test_h3_uniformity():
+    """Hash of random inputs should fill the table roughly uniformly."""
+    params = make_h3_params(jax.random.PRNGKey(7), 1, 20, 6)
+    bits = jax.random.bernoulli(jax.random.PRNGKey(8), 0.5, (4000, 20))
+    h = np.asarray(h3_hash(bits, params))[:, 0]
+    counts = np.bincount(h, minlength=64)
+    assert counts.min() > 20, "no empty buckets expected at 62 avg"
+
+
+def test_pack_bits():
+    bits = jnp.array([[1] + [0] * 30 + [1, 1] + [0] * 31], bool)  # 64 bits
+    words = pack_bits_u32(bits)
+    assert words.shape == (1, 2)
+    assert int(words[0, 0]) == 1 | (1 << 31)
+    assert int(words[0, 1]) == 1
+
+
+def test_murmur_range_and_determinism():
+    bits = jax.random.bernoulli(jax.random.PRNGKey(3), 0.5, (32, 24))
+    h = murmur_double_hash(bits, 4, 128)
+    assert h.shape == (32, 4)
+    assert (np.asarray(h) >= 0).all() and (np.asarray(h) < 128).all()
+    np.testing.assert_array_equal(
+        np.asarray(h), np.asarray(murmur_double_hash(bits, 4, 128)))
+
+
+def test_murmur_double_hash_structure():
+    """h_i = h1 + i*h2 (mod E): differences between consecutive hashes are
+    constant — the classic Kirsch–Mitzenmacher construction."""
+    bits = jax.random.bernoulli(jax.random.PRNGKey(4), 0.5, (16, 18))
+    h = np.asarray(murmur_double_hash(bits, 4, 256)).astype(np.int64)
+    d = np.diff(h, axis=1) % 256
+    assert (d == d[:, :1]).all()

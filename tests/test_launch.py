@@ -1,0 +1,154 @@
+"""End-to-end launcher tests on the 1-device host mesh: training loop with
+checkpoint/restart/preemption, serving loop, HLO cost analysis."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer
+from repro.train import fault
+
+
+@pytest.fixture(scope="module")
+def smoke_cfg():
+    return get_config("llama3p2_3b", smoke=True)
+
+
+def test_train_loss_decreases(smoke_cfg):
+    out = train_mod.train(smoke_cfg, steps_total=12, batch=4, seq=64,
+                          lr=3e-3, verbose=False, compute_dtype=None)
+    losses = [h["loss"] for h in out["history"]]
+    assert len(losses) == 12
+    assert losses[-1] < losses[0], f"{losses[0]} -> {losses[-1]}"
+
+
+def test_train_checkpoint_restart(tmp_path, smoke_cfg):
+    """Kill training mid-run; restart continues from the checkpoint and
+    the step counter in the optimizer state is preserved."""
+    ckpt = str(tmp_path / "ckpt")
+    out1 = train_mod.train(smoke_cfg, steps_total=6, batch=2, seq=32,
+                           ckpt_dir=ckpt, ckpt_every=3, verbose=False,
+                           compute_dtype=None)
+    from repro.train import checkpoint
+    assert checkpoint.latest_step(ckpt) == 6
+    out2 = train_mod.train(smoke_cfg, steps_total=10, batch=2, seq=32,
+                           ckpt_dir=ckpt, ckpt_every=100, verbose=False,
+                           compute_dtype=None)
+    steps2 = [h["step"] for h in out2["history"]]
+    assert steps2[0] == 6, "restart must resume after the checkpoint"
+    assert int(out2["opt_state"].step) == 10
+
+
+def test_train_preemption(tmp_path, smoke_cfg):
+    ckpt = str(tmp_path / "ckpt")
+    guard = fault.PreemptionGuard()
+    guard.request()          # preempt immediately
+    out = train_mod.train(smoke_cfg, steps_total=50, batch=2, seq=32,
+                          ckpt_dir=ckpt, verbose=False, guard=guard,
+                          compute_dtype=None)
+    assert out["preempted"]
+    assert len(out["history"]) == 1, "stops at the first step boundary"
+    from repro.train import checkpoint
+    assert checkpoint.latest_step(ckpt) == 1
+
+
+def test_train_microbatched_equals_full_batch(smoke_cfg):
+    """Grad accumulation must give the same first-step loss/update
+    direction as the single-batch step (same data, same math mod fp error)."""
+    from repro.launch import steps
+    from repro.train import optimizer as opt_lib
+    cfg = smoke_cfg
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    opt = opt_lib.sgd(1e-2)
+    s1 = steps.make_train_step(cfg, opt, microbatches=1, compute_dtype=None)
+    s4 = steps.make_train_step(cfg, opt, microbatches=4, compute_dtype=None)
+    p1, _, m1 = jax.jit(s1)(params, opt.init(params), batch)
+    p4, _, m4 = jax.jit(s4)(params, opt.init(params), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-4)
+    d1 = jax.tree.leaves(p1)[0] - jax.tree.leaves(params)[0]
+    d4 = jax.tree.leaves(p4)[0] - jax.tree.leaves(params)[0]
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d4),
+                               atol=5e-4, rtol=5e-2)
+
+
+def test_serve_greedy_deterministic(smoke_cfg):
+    cfg = smoke_cfg
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                 cfg.vocab_size, jnp.int32)
+    a = serve_mod.serve(cfg, params, prompts, max_len=40, gen=8)
+    b = serve_mod.serve(cfg, params, prompts, max_len=40, gen=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (2, 8)
+    assert (np.asarray(a) < cfg.vocab_size + 1).all()
+
+
+def test_data_iterator_restart_safe(smoke_cfg):
+    it1 = train_mod.data_iterator(smoke_cfg, 2, 16, seed=3, start_step=5)
+    it2 = train_mod.data_iterator(smoke_cfg, 2, 16, seed=3, start_step=5)
+    s1, d1 = next(it1)
+    s2, d2 = next(it2)
+    assert s1 == s2 == 5
+    np.testing.assert_array_equal(np.asarray(d1["tokens"]),
+                                  np.asarray(d2["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis (1-device compile; no placeholder devices needed)
+# ---------------------------------------------------------------------------
+
+def test_hlo_trip_count_expansion():
+    """A scan of N dot steps must count N x the dot flops."""
+    from repro.launch import hlo_analysis
+    n, d = 7, 64
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=n)
+        return out
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+        jax.ShapeDtypeStruct((d, d), jnp.float32)).compile()
+    cost = hlo_analysis.analyze(compiled.as_text())
+    expect = n * 2 * d ** 3
+    assert cost.dot_flops == pytest.approx(expect, rel=0.01), \
+        f"{cost.dot_flops} vs {expect}"
+
+
+def test_hlo_dynamic_slice_not_overcharged():
+    """Reading one row per scan step from a big stacked tensor must charge
+    per-slice bytes, not the full tensor each iteration."""
+    from repro.launch import hlo_analysis
+    n, d = 64, 128
+    big = jax.ShapeDtypeStruct((n, d, d), jnp.float32)
+
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    compiled = jax.jit(f).lower(
+        big, jax.ShapeDtypeStruct((d, d), jnp.float32)).compile()
+    cost = hlo_analysis.analyze(compiled.as_text())
+    full_tensor_every_step = n * (n * d * d * 4)
+    assert cost.hbm_bytes < 0.5 * full_tensor_every_step
+
+
+def test_hlo_shape_parsing():
+    from repro.launch import hlo_analysis as ha
+    assert ha.shape_bytes("f32[4,8]{1,0}") == 128
+    assert ha.shape_bytes("bf16[10]{0}") == 20
+    assert ha.shape_bytes("(f32[2]{0}, s8[4]{0})") == 12
+    assert ha.shape_bytes("pred[]") == 1

@@ -1,0 +1,167 @@
+"""Per-arch smoke tests + train/serve consistency for the 10-arch zoo.
+
+The strongest correctness check is teacher-forcing equivalence: logits from
+one big forward_train pass must match step-by-step prefill+decode over the
+same tokens (validates every cache type: GQA ring buffer, MLA latent, SSM
+state, RG-LRU state, whisper cross-attention)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, registry, shapes_for
+from repro.models import transformer
+
+B, S = 2, 24
+
+
+def _inputs(cfg, key, b=B, s=S):
+    ks = jax.random.split(key, 3)
+    kwargs = {}
+    tokens = jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size, jnp.int32)
+    if cfg.encoder_layers:
+        kwargs["frames"] = jax.random.normal(
+            ks[1], (b, cfg.encoder_frames, cfg.d_model)) * 0.05
+    if cfg.patch_tokens:
+        kwargs["patches"] = jax.random.normal(
+            ks[2], (b, cfg.patch_tokens, cfg.d_model)) * 0.05
+    return tokens, kwargs
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, kwargs = _inputs(cfg, jax.random.PRNGKey(1))
+    logits, aux = transformer.forward_train(cfg, params, tokens, **kwargs)
+    s_out = S + (cfg.patch_tokens or 0)
+    assert logits.shape == (B, s_out, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch} produced NaN/Inf"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step_improves_loss(arch):
+    """One gradient step on one batch must reduce its loss."""
+    from repro.launch import steps
+    from repro.train import optimizer as opt_lib
+    cfg = get_config(arch, smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, kwargs = _inputs(cfg, jax.random.PRNGKey(1))
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1),
+             **kwargs}
+    optimizer = opt_lib.adam(3e-3)
+    step = jax.jit(steps.make_train_step(cfg, optimizer,
+                                         compute_dtype=None))
+    opt_state = optimizer.init(params)
+    p, o, m0 = step(params, opt_state, batch)
+    for _ in range(3):
+        p, o, m = step(p, o, batch)
+    assert float(m["loss"]) < float(m0["loss"]), \
+        f"{arch}: loss {m0['loss']} -> {m['loss']}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_teacher_forcing(arch):
+    """decode(t) logits == forward_train logits at position t.
+
+    MoE archs run with a large capacity factor: capacity competition is
+    batch-composition-dependent by design (a token dropped in a 24-token
+    prefill group may be kept in a 1-token decode group), so equivalence
+    is only exact when nothing is dropped."""
+    import dataclasses
+    cfg = get_config(arch, smoke=True)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tokens, kwargs = _inputs(cfg, jax.random.PRNGKey(1))
+
+    full, _ = transformer.forward_train(cfg, params, tokens, remat=False,
+                                        **kwargs)
+    if cfg.patch_tokens:
+        full = full[:, cfg.patch_tokens:]
+
+    split = S // 2
+    # cache must hold patch tokens + full sequence (they share positions)
+    max_len = S + (cfg.patch_tokens or 0) + 4
+    logits_p, state = transformer.forward_prefill(
+        cfg, params, tokens[:, :split], max_len=max_len, **kwargs)
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1]),
+                               np.asarray(full[:, split - 1]),
+                               atol=2e-2, rtol=2e-2)
+    logits_d = []
+    for t in range(split, S):
+        ld, state = transformer.forward_decode(cfg, params, tokens[:, t:t+1],
+                                               state)
+        logits_d.append(ld[:, 0])
+    got = np.stack([np.asarray(x) for x in logits_d], axis=1)
+    np.testing.assert_allclose(got, np.asarray(full[:, split:]),
+                               atol=2e-2, rtol=2e-2,
+                               err_msg=f"{arch} cache semantics diverge")
+
+
+def test_sliding_window_cache_equivalence():
+    """Ring-buffer decode must equal training attention once the window is
+    the binding constraint (mixtral SWA)."""
+    import dataclasses
+    cfg = get_config("mixtral_8x7b", smoke=True)     # window 16 < S
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    assert cfg.sliding_window and cfg.sliding_window < S
+    params = transformer.init_params(cfg, jax.random.PRNGKey(3))
+    tokens, _ = _inputs(cfg, jax.random.PRNGKey(4))
+    full, _ = transformer.forward_train(cfg, params, tokens, remat=False)
+    _, state = transformer.forward_prefill(cfg, params, tokens[:, :S - 4],
+                                           max_len=S + 4)
+    state_logits = []
+    for t in range(S - 4, S):
+        ld, state = transformer.forward_decode(cfg, params, tokens[:, t:t+1],
+                                               state)
+        state_logits.append(np.asarray(ld[:, 0]))
+    np.testing.assert_allclose(np.stack(state_logits, 1),
+                               np.asarray(full[:, S - 4:]),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_registry_covers_assignment():
+    reg = registry()
+    assert len(reg) == 10
+    fams = {cfg.family for cfg in reg.values()}
+    assert fams == {"dense", "moe", "ssm", "hybrid", "audio", "vlm"}
+
+
+def test_shape_applicability():
+    """long_500k only for sub-quadratic archs (DESIGN §5 skip table)."""
+    long_archs = {a for a in ARCH_IDS
+                  if any(s.name == "long_500k"
+                         for s in shapes_for(get_config(a)))}
+    assert long_archs == {"mamba2_2p7b", "recurrentgemma_2b", "mixtral_8x7b"}
+
+
+def test_param_schema_modes_agree():
+    """init / shape / logical walks must produce identical tree structure."""
+    for arch in ("llama3p2_3b", "deepseek_v2_lite_16b", "whisper_tiny",
+                 "mamba2_2p7b", "recurrentgemma_2b"):
+        cfg = get_config(arch, smoke=True)
+        init = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        shapes = transformer.param_shapes(cfg)
+        logical = transformer.param_logical(cfg)
+        t1 = jax.tree.structure(init)
+        t2 = jax.tree.structure(shapes)
+        assert t1 == t2
+        # every array leaf has a logical tuple of matching rank
+        flat_i = jax.tree.leaves(init)
+        flat_l = jax.tree.leaves(logical,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        assert len(flat_i) == len(flat_l)
+        for a, log in zip(flat_i, flat_l):
+            assert a.ndim == len(log), (arch, a.shape, log)
+
+
+def test_param_counts_sane():
+    """Config param_count() within 25% of actual initialised params
+    (approximation ignores norms/biases)."""
+    for arch in ("llama3p2_3b", "mixtral_8x7b", "mamba2_2p7b"):
+        cfg = get_config(arch, smoke=True)
+        params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        assert cfg.param_count() == pytest.approx(actual, rel=0.25), arch

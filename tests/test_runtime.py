@@ -1,0 +1,188 @@
+"""Training-runtime substrate: optimizer, checkpoint, fault tolerance,
+gradient compression."""
+import os
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint, compression, fault
+from repro.train import optimizer as opt_lib
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adam_matches_reference():
+    """Our Adam vs a hand-rolled numpy reference, 5 steps."""
+    lr, b1, b2, eps = 1e-2, 0.9, 0.999, 1e-8
+    opt = opt_lib.adam(lr, b1=b1, b2=b2, eps=eps)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    state = opt.init(p)
+
+    w = np.array([1.0, -2.0, 3.0])
+    m = np.zeros(3)
+    v = np.zeros(3)
+    for t in range(1, 6):
+        g = {"w": jnp.asarray(0.1 * w.astype(np.float32))}
+        upd, state = opt.update(g, state, p)
+        p = opt_lib.apply_updates(p, upd)
+        gn = 0.1 * w
+        m = b1 * m + (1 - b1) * gn
+        v = b2 * v + (1 - b2) * gn * gn
+        w = w - lr * (m / (1 - b1 ** t)) / (np.sqrt(v / (1 - b2 ** t)) + eps)
+    np.testing.assert_allclose(np.asarray(p["w"]), w, rtol=1e-5)
+
+
+def test_adamw_decoupled_decay():
+    opt = opt_lib.adamw(1e-2, weight_decay=0.1)
+    p = {"w": jnp.ones(3)}
+    st = opt.init(p)
+    upd, _ = opt.update({"w": jnp.zeros(3)}, st, p)
+    np.testing.assert_allclose(np.asarray(upd["w"]), -1e-2 * 0.1 * np.ones(3),
+                               rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, norm = opt_lib.clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    total = jnp.sqrt(clipped["a"][0] ** 2 + clipped["b"][0] ** 2)
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_schedule():
+    sched = opt_lib.warmup_cosine_schedule(1.0, 10, 100)
+    assert float(sched(0)) == pytest.approx(0.0)
+    assert float(sched(10)) == pytest.approx(1.0, abs=0.02)
+    assert float(sched(100)) == pytest.approx(0.0, abs=1e-6)
+    mid = float(sched(55))
+    assert 0.4 < mid < 0.6
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (4, 3)),
+            "state": {"mu": jnp.zeros((4, 3)), "step": jnp.asarray(7)},
+            "none": None}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree(0)
+    checkpoint.save(str(tmp_path), 5, tree)
+    back, step = checkpoint.restore_latest(str(tmp_path), _tree(1))
+    assert step == 5
+    np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(tree["w"]))
+    assert back["none"] is None
+
+
+def test_checkpoint_keep_n(tmp_path):
+    tree = _tree(0)
+    for s in range(6):
+        checkpoint.save(str(tmp_path), s, tree, keep=3)
+    assert checkpoint.all_steps(str(tmp_path)) == [3, 4, 5]
+
+
+def test_checkpoint_ignores_incomplete(tmp_path):
+    tree = _tree(0)
+    checkpoint.save(str(tmp_path), 1, tree)
+    # fake a torn write: step dir without DONE marker
+    torn = tmp_path / "step_0000000002"
+    torn.mkdir()
+    (torn / "arrays.npz").write_bytes(b"garbage")
+    assert checkpoint.latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_restores_dtype_of_like(tmp_path):
+    tree = {"w": jnp.ones((2, 2), jnp.float32)}
+    checkpoint.save(str(tmp_path), 1, tree)
+    like = {"w": jnp.zeros((2, 2), jnp.bfloat16)}
+    back, _ = checkpoint.restore_latest(str(tmp_path), like)
+    assert back["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_preemption_guard_signal():
+    with fault.PreemptionGuard(signals=(signal.SIGUSR1,)) as guard:
+        assert not guard.preempted
+        os.kill(os.getpid(), signal.SIGUSR1)
+        time.sleep(0.05)
+        assert guard.preempted
+
+
+def test_straggler_monitor_flags_slow_step():
+    mon = fault.StragglerMonitor(threshold=3.0, warmup_steps=0)
+    for i in range(5):
+        mon.start()
+        time.sleep(0.01)
+        assert mon.stop(i) is None
+    mon.start()
+    time.sleep(0.12)
+    ev = mon.stop(5)
+    assert ev is not None and ev.ratio > 3.0
+    assert len(mon.events) == 1
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 cross-pod all-reduce)
+# ---------------------------------------------------------------------------
+
+def test_compressed_psum_approximates_mean():
+    """vmap with an axis name stands in for the pod axis."""
+    grads = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 0.1
+
+    def f(g):
+        out, err = compression.compressed_psum_leaf(g, "pod")
+        return out, err
+
+    outs, errs = jax.vmap(f, axis_name="pod")(grads)
+    mean = jnp.mean(grads, axis=0)
+    scale = float(jnp.max(jnp.abs(grads))) / 127.0
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(mean),
+                               atol=2 * scale)
+    # error feedback: residual equals what quantisation dropped
+    assert float(jnp.max(jnp.abs(errs))) <= scale + 1e-7
+
+
+def test_error_feedback_reduces_bias():
+    """Accumulated compressed sums with error feedback converge to the true
+    accumulated mean (bias -> 0), unlike without feedback."""
+    key = jax.random.PRNGKey(1)
+    steps = 30
+    g = jax.random.normal(key, (4, 32)) * 0.05   # constant per-pod grads
+    true_mean = jnp.mean(g, axis=0)
+
+    def run(with_feedback):
+        err = jnp.zeros((4, 32))
+        acc = jnp.zeros(32)
+        for _ in range(steps):
+            def f(gi, ei):
+                return compression.compressed_psum_leaf(
+                    gi, "pod", ei if with_feedback else None)
+            outs, err = jax.vmap(f, axis_name="pod")(g, err)
+            acc = acc + outs[0]
+        return acc / steps
+
+    bias_fb = float(jnp.max(jnp.abs(run(True) - true_mean)))
+    bias_no = float(jnp.max(jnp.abs(run(False) - true_mean)))
+    assert bias_fb <= bias_no + 1e-7
+    assert bias_fb < 0.35 * (float(jnp.max(jnp.abs(g))) / 127.0)
+
+
+def test_cross_pod_bytes_accounting():
+    grads = {"a": jnp.zeros((10, 10)), "b": jnp.zeros(5)}
+    full = compression.cross_pod_bytes(grads, compressed=False)
+    comp = compression.cross_pod_bytes(grads, compressed=True)
+    assert full == 105 * 4
+    assert comp == 105 * 1 + 2 * 4      # int8 payload + per-tensor scale

@@ -1,0 +1,119 @@
+"""End-to-end system test: the paper's full pipeline on synthetic MNIST.
+
+One flow exercising every ULEEN stage in order (Fig. 7b):
+encode -> one-shot(+bleach) baseline -> multi-shot STE -> prune+bias+
+fine-tune -> binarize -> export -> fused-kernel inference -> hardware
+energy model — asserting each of the paper's qualitative claims along
+the way.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import export as ex
+from repro.core import hwmodel, one_shot
+from repro.core.encoding import fit_gaussian_thermometer
+from repro.core.model import (SubmodelSpec, UleenSpec, compute_hashes,
+                              init_params, init_static)
+from repro.core.multi_shot import MultiShotConfig, train_multi_shot
+from repro.core.pruning import prune_and_finetune
+from repro.data.synth import make_mnist_like
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    # 2500 train samples: the multi-shot > one-shot crossover needs the
+    # counting tables to start saturating (conftest note; paper §V-E).
+    key = jax.random.PRNGKey(42)
+    ds = make_mnist_like(key, n_train=2500, n_test=400, hw=16)
+    enc = fit_gaussian_thermometer(ds.x_train, 2)
+    bits_tr, bits_te = enc.encode(ds.x_train), enc.encode(ds.x_test)
+    spec = UleenSpec(num_classes=10, total_bits=bits_tr.shape[1],
+                     submodels=(SubmodelSpec(12, 6), SubmodelSpec(16, 6),
+                                SubmodelSpec(20, 6)),
+                     bits_per_input=2)
+    statics = init_static(jax.random.PRNGKey(1), spec)
+
+    osm = one_shot.train_one_shot(spec, statics, bits_tr, ds.y_train,
+                                  bits_te, ds.y_test)
+    acc_os = one_shot.evaluate_one_shot(spec, statics, osm, bits_te,
+                                        ds.y_test)
+
+    params = init_params(jax.random.PRNGKey(2), spec, init_scale=0.1)
+    ms = train_multi_shot(spec, statics, params, bits_tr, ds.y_train,
+                          bits_te, ds.y_test,
+                          MultiShotConfig(epochs=20, batch_size=128,
+                                          learning_rate=1e-2))
+    pruned = prune_and_finetune(
+        spec, statics, ms.params, bits_tr, ds.y_train, bits_te, ds.y_test,
+        ratio=0.3, finetune=MultiShotConfig(epochs=4, batch_size=128,
+                                            learning_rate=5e-3))
+    art = ex.export_model(spec, statics, pruned.params)
+    return dict(ds=ds, enc=enc, spec=spec, statics=statics,
+                bits_te=bits_te, acc_os=acc_os, ms=ms, pruned=pruned,
+                art=art)
+
+
+def test_claim_multishot_beats_oneshot(pipeline):
+    assert pipeline["ms"].val_accuracy > pipeline["acc_os"]
+
+
+def test_claim_prune_30pct_cheap(pipeline):
+    assert pipeline["pruned"].val_accuracy >= \
+        pipeline["ms"].val_accuracy - 0.05
+    full = pipeline["spec"].size_kib()
+    assert pipeline["art"].size_kib == pytest.approx(0.7 * full, rel=0.06)
+
+
+def test_exported_artifact_serves_with_fused_kernel(pipeline):
+    """Deployment path: artifact -> fused Pallas kernel (interpret) ==
+    continuous model argmax."""
+    spec, statics = pipeline["spec"], pipeline["statics"]
+    art, bits = pipeline["art"], pipeline["bits_te"][:64]
+    hashes_ref = compute_hashes(spec, statics, bits)
+
+    scores = jnp.zeros((64, art.num_classes), jnp.int32)
+    for i, sm in enumerate(art.submodels):
+        tuples = bits[:, jnp.asarray(sm.perm)].astype(jnp.int8)
+        table = jnp.asarray(ex.unpack_table(sm.packed, sm.entries)
+                            ).astype(jnp.int8)
+        scores = scores + ops.wnn_infer(
+            tuples, jnp.asarray(sm.h3).astype(jnp.int32), table,
+            jnp.asarray(sm.mask).astype(jnp.int8),
+            jnp.zeros((art.num_classes,), jnp.int32), use_kernel=True)
+    scores = scores + jnp.asarray(art.bias)[None]
+
+    from repro.core.model import binarize_params, forward_binary
+    tables_bin, masks, bias = binarize_params(pipeline["pruned"].params)
+    expect = forward_binary(spec, tables_bin, masks, bias, hashes_ref)
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(expect))
+
+
+def test_edge_accuracy_survives_binarization(pipeline):
+    """Binary deployment accuracy within 2 points of continuous eval."""
+    spec, statics = pipeline["spec"], pipeline["statics"]
+    ds = pipeline["ds"]
+    bits_te = pipeline["bits_te"]
+    from repro.core.model import binarize_params, forward_binary
+    tables_bin, masks, bias = binarize_params(pipeline["pruned"].params)
+    h = compute_hashes(spec, statics, bits_te)
+    pred = jnp.argmax(forward_binary(spec, tables_bin, masks, bias, h), -1)
+    acc = float(jnp.mean(pred == ds.y_test))
+    assert acc >= pipeline["pruned"].val_accuracy - 0.02
+
+
+def test_hw_model_on_trained_artifact(pipeline):
+    """Energy model runs on OUR model (not just the paper's points) and
+    the ULEEN-vs-DNN energy gap direction is reproduced."""
+    counts = hwmodel.counts_from_artifact(pipeline["art"])
+    plats = hwmodel.calibrated_platforms()
+    fpga = hwmodel.evaluate_design(counts, plats["fpga"])
+    asic = hwmodel.evaluate_design(counts, plats["asic"])
+    assert fpga.throughput_kips > 1000      # ULEEN is bus-bound, very fast
+    assert asic.energy_uj_steady < 1.0      # << 1 uJ/inference on ASIC
+    # paper: FINN SFC burns 0.591 uJ steady-state for the same task class;
+    # our (smaller) model must land well under it.
+    assert asic.energy_uj_steady < 0.591
+    assert asic.area_mm2 is not None and asic.area_mm2 < 6.0

@@ -1,0 +1,140 @@
+"""One-shot + multi-shot + pruning training behaviour (ULEEN §III-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import one_shot
+from repro.core.model import (UleenParams, binarize_params, compute_hashes,
+                              forward, forward_binary, init_params)
+from repro.core.multi_shot import (MultiShotConfig, evaluate,
+                                   train_multi_shot)
+from repro.core.pruning import (filter_correlations, prune_and_finetune,
+                                prune_masks)
+
+
+@pytest.fixture(scope="module")
+def oneshot_model(tiny_spec, tiny_statics, encoded):
+    bits_tr, y_tr, bits_te, y_te = encoded
+    return one_shot.train_one_shot(tiny_spec, tiny_statics, bits_tr, y_tr,
+                                   bits_te, y_te)
+
+
+def test_one_shot_beats_chance(tiny_spec, tiny_statics, encoded,
+                               oneshot_model):
+    bits_tr, y_tr, bits_te, y_te = encoded
+    acc = one_shot.evaluate_one_shot(tiny_spec, tiny_statics, oneshot_model,
+                                     bits_te, y_te)
+    assert acc > 0.4, f"one-shot accuracy {acc} barely above 10-class chance"
+
+
+def test_bleach_above_one_helps_or_ties(tiny_spec, tiny_statics, encoded,
+                                        oneshot_model):
+    """Paper: without bleaching (b=1) large training sets saturate; the
+    searched b must be at least as good on validation."""
+    bits_tr, y_tr, bits_te, y_te = encoded
+    h_te = compute_hashes(tiny_spec, tiny_statics, bits_te)
+
+    def acc_at(b):
+        from repro.core import bloom
+        scores = sum(
+            jnp.sum(bloom.counting_min_values(t, h) >= b, -1,
+                    dtype=jnp.int32)
+            for t, h in zip(oneshot_model.counting, h_te))
+        return float(jnp.mean(jnp.argmax(scores, -1) == y_te))
+
+    assert acc_at(int(oneshot_model.bleach)) >= acc_at(1) - 1e-6
+
+
+def test_one_shot_counters_monotone(tiny_spec, tiny_statics, encoded):
+    """Counting tables only grow with more data."""
+    bits_tr, y_tr, bits_te, y_te = encoded
+    m1 = one_shot.train_one_shot(tiny_spec, tiny_statics, bits_tr[:200],
+                                 y_tr[:200], bits_te, y_te)
+    m2 = one_shot.train_one_shot(tiny_spec, tiny_statics, bits_tr[:400],
+                                 y_tr[:400], bits_te, y_te)
+    # same first 200 samples -> counters can only have increased
+    for t1, t2 in zip(m1.counting, m2.counting):
+        assert bool(jnp.all(t2 >= t1))
+
+
+@pytest.fixture(scope="module")
+def multishot_result(tiny_spec, tiny_statics, encoded):
+    bits_tr, y_tr, bits_te, y_te = encoded
+    params = init_params(jax.random.PRNGKey(2), tiny_spec, init_scale=0.1)
+    return train_multi_shot(
+        tiny_spec, tiny_statics, params, bits_tr, y_tr, bits_te, y_te,
+        MultiShotConfig(epochs=20, batch_size=128, learning_rate=1e-2))
+
+
+def test_multi_shot_loss_decreases(multishot_result):
+    losses = [h["loss"] for h in multishot_result.history]
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_multi_shot_beats_one_shot(tiny_spec, tiny_statics, encoded,
+                                   oneshot_model, multishot_result):
+    """The paper's core training claim (§V-B)."""
+    bits_tr, y_tr, bits_te, y_te = encoded
+    acc_os = one_shot.evaluate_one_shot(tiny_spec, tiny_statics,
+                                        oneshot_model, bits_te, y_te)
+    assert multishot_result.val_accuracy > acc_os
+
+
+def test_binarized_matches_continuous_inference(tiny_spec, tiny_statics,
+                                                encoded, multishot_result):
+    """Deployment path: binary tables + popcount == STE forward at eval.
+
+    Compared pre-bias: the deployed artifact rounds the (trained, float)
+    bias to an integer, which can legitimately flip near-tie argmaxes."""
+    bits_tr, y_tr, bits_te, y_te = encoded
+    params = multishot_result.params._replace(
+        bias=jnp.zeros_like(multishot_result.params.bias))
+    h = compute_hashes(tiny_spec, tiny_statics, bits_te[:64])
+    cont = forward(tiny_spec, params, h, train=False)
+    tables_bin, masks, bias = binarize_params(params)
+    binary = forward_binary(tiny_spec, tables_bin, masks, bias, h)
+    np.testing.assert_array_equal(np.asarray(cont).astype(np.int32),
+                                  np.asarray(binary))
+
+
+def test_prune_mask_counts(tiny_spec, tiny_statics, encoded,
+                           multishot_result):
+    bits_tr, y_tr, _, _ = encoded
+    h = compute_hashes(tiny_spec, tiny_statics, bits_tr[:256])
+    corr = filter_correlations(tiny_spec, multishot_result.params, h,
+                               y_tr[:256])
+    masks = prune_masks(tiny_spec, corr, 0.3)
+    for i, sm in enumerate(tiny_spec.submodels):
+        n_f = tiny_spec.num_filters(sm)
+        expect = n_f - int(round(0.3 * n_f))
+        per_class = np.asarray(masks[i].sum(axis=1))
+        assert (per_class == expect).all()
+
+
+def test_prune_30pct_keeps_accuracy(tiny_spec, tiny_statics, encoded,
+                                    multishot_result):
+    """Paper §V-F1: ~30% pruning costs almost nothing after fine-tune."""
+    bits_tr, y_tr, bits_te, y_te = encoded
+    res = prune_and_finetune(
+        tiny_spec, tiny_statics, multishot_result.params, bits_tr, y_tr,
+        bits_te, y_te, ratio=0.3,
+        finetune=MultiShotConfig(epochs=4, batch_size=128,
+                                 learning_rate=5e-3))
+    assert res.val_accuracy >= multishot_result.val_accuracy - 0.05
+    # size shrinks ~30%
+    full = tiny_spec.size_kib()
+    pruned = tiny_spec.size_kib(res.params.masks)
+    assert pruned == pytest.approx(full * 0.7, rel=0.05)
+
+
+def test_dropout_only_in_train_mode(tiny_spec, tiny_statics, encoded,
+                                    tiny_params):
+    bits_tr, *_ = encoded
+    h = compute_hashes(tiny_spec, tiny_statics, bits_tr[:16])
+    a = forward(tiny_spec, tiny_params, h, train=False)
+    b = forward(tiny_spec, tiny_params, h, train=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    rng = jax.random.PRNGKey(0)
+    c = forward(tiny_spec, tiny_params, h, train=True, rng=rng)
+    assert not np.allclose(np.asarray(a), np.asarray(c))
