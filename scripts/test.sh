@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point. Usage:
+#   scripts/test.sh            # full suite (what the roadmap calls tier-1)
+#   scripts/test.sh --fast     # skip @pytest.mark.slow (CI fast job)
+#   scripts/test.sh <pytest args...>
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+args=()
+if [[ "${1:-}" == "--fast" ]]; then
+    shift
+    args+=(-m "not slow")
+fi
+exec python -m pytest -x -q "${args[@]}" "$@"

@@ -98,10 +98,17 @@ def init_static(key: jax.Array, spec: UleenSpec) -> list[SubmodelStatic]:
 
 def init_params(key: jax.Array, spec: UleenSpec,
                 init_scale: float = 1.0) -> UleenParams:
-    """init_scale=1.0 is the paper's U(-1,1). Small-scale CPU runs use 0.1:
-    STE dynamics are identical up to a time rescale (an entry flips after
-    ~|init|/lr consistent gradient steps), so a smaller range reaches the
-    same binarised model in proportionally fewer steps (DESIGN §8)."""
+    """Tables start as *nearly empty* Bloom filters: U(-init_scale,
+    0.1*init_scale), i.e. ~91% of entries negative. A symmetric U(-s, s)
+    init leaves every entry the training data never touches with a random
+    sign, so unseen (validation) patterns hash into untouched entries and
+    fire filters spuriously with p=1/4 — a noise floor the one-shot
+    counting tables (which start at 0 = "not seen") never pay. The small
+    positive tail keeps a few initial responses alive so dropout/gradient
+    signal exists from step one. init_scale only sets the range; STE
+    dynamics are identical up to a time rescale (an entry flips after
+    ~|init|/lr consistent gradient steps), so small-scale CPU runs use 0.1
+    (DESIGN §8)."""
     tables = []
     masks = []
     for sm in spec.submodels:
@@ -109,7 +116,7 @@ def init_params(key: jax.Array, spec: UleenSpec,
         n_f = spec.num_filters(sm)
         tables.append(jax.random.uniform(
             sub, (spec.num_classes, n_f, sm.entries), jnp.float32,
-            -init_scale, init_scale))
+            -init_scale, 0.1 * init_scale))
         masks.append(jnp.ones((spec.num_classes, n_f), jnp.float32))
     return UleenParams(tables=tuple(tables), bias=jnp.zeros(spec.num_classes),
                        masks=tuple(masks))

@@ -74,9 +74,9 @@ def make_eval_fn(spec: UleenSpec) -> Callable:
 
 
 class TrainResult(NamedTuple):
-    params: UleenParams
+    params: UleenParams      # best-validation-epoch snapshot
     history: list
-    val_accuracy: float
+    val_accuracy: float      # accuracy of the returned params
 
 
 def train_multi_shot(spec: UleenSpec, statics: Sequence[SubmodelStatic],
@@ -85,7 +85,17 @@ def train_multi_shot(spec: UleenSpec, statics: Sequence[SubmodelStatic],
                      bits_val: jnp.ndarray, labels_val: jnp.ndarray,
                      cfg: MultiShotConfig = MultiShotConfig()) -> TrainResult:
     """Single-host training driver (examples/tests). The distributed driver
-    lives in repro/launch/train.py and reuses make_train_step under pjit."""
+    lives in repro/launch/train.py and reuses make_train_step under pjit.
+
+    Returns the params of the best-validation epoch (early stopping by
+    snapshot): STE + dropout(0.5) training never converges pointwise — the
+    binarised model keeps hopping between nearby solutions — so the last
+    epoch is an arbitrary draw from that plateau, not its best point.
+    val_accuracy is the selected epoch's accuracy on the val split, i.e.
+    the split also does model selection (upward-biased by the max over
+    epochs). That mirrors the one-shot baseline, whose bleaching threshold
+    is likewise searched on the val split — comparisons between the two
+    select symmetrically. Report on a held-out test split for papers."""
     optimizer = opt_lib.adam(cfg.learning_rate)
     opt_state = optimizer.init(params)
     train_step = jax.jit(make_train_step(spec, optimizer, cfg.clip_table,
@@ -101,6 +111,7 @@ def train_multi_shot(spec: UleenSpec, statics: Sequence[SubmodelStatic],
     rng = jax.random.PRNGKey(cfg.seed)
     history = []
     rng_np = np.random.default_rng(cfg.seed)
+    best_acc, best_params = -1.0, params
 
     for epoch in range(cfg.epochs):
         perm = rng_np.permutation(n)
@@ -113,14 +124,16 @@ def train_multi_shot(spec: UleenSpec, statics: Sequence[SubmodelStatic],
             params, opt_state, loss, acc = train_step(params, opt_state, hb, yb, sub)
             ep_loss += float(loss); ep_acc += float(acc)
         val_acc = float(eval_fn(params, h_val, labels_val))
+        if val_acc > best_acc:
+            best_acc, best_params = val_acc, params
         history.append(dict(epoch=epoch, loss=ep_loss / steps_per_epoch,
                             train_acc=ep_acc / steps_per_epoch, val_acc=val_acc,
                             time=time.time()))
         if cfg.verbose:
             print(f"[multi-shot] epoch {epoch}: loss={history[-1]['loss']:.4f} "
                   f"train_acc={history[-1]['train_acc']:.4f} val_acc={val_acc:.4f}")
-    return TrainResult(params=params, history=history,
-                       val_accuracy=history[-1]["val_acc"] if history else 0.0)
+    return TrainResult(params=best_params, history=history,
+                       val_accuracy=best_acc if history else 0.0)
 
 
 def evaluate(spec: UleenSpec, statics: Sequence[SubmodelStatic],

@@ -1,0 +1,1 @@
+"""Distributed-execution utilities: logical-axis sharding rules."""

@@ -80,5 +80,10 @@ def cache_read(cache: AttnCache, dtype=jnp.bfloat16):
 
 def init_mla_cache(batch: int, window: int, lora_rank: int,
                    rope_dim: int) -> MLACache:
-    return MLACache(ckv=jnp.zeros((batch, window, lora_rank), jnp.bfloat16),
+    # ckv f32: the latent is already the compressed representation, and
+    # bf16 rounding here is amplified by the w_uk/w_uv up-projections
+    # enough to break decode == teacher-forcing equivalence. krope is
+    # consumed directly (no up-projection), so it stays bf16 like the
+    # standard K cache.
+    return MLACache(ckv=jnp.zeros((batch, window, lora_rank), jnp.float32),
                     krope=jnp.zeros((batch, window, rope_dim), jnp.bfloat16))

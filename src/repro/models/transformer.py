@@ -382,15 +382,15 @@ def mla_mixer(cfg, p, x, positions, *, mode: str = "train", cache=None,
             new_cache = kvcache.init_mla_cache(b, w, r, rd)
             new_cache = kvcache.MLACache(
                 ckv=new_cache.ckv.at[:, slots].set(
-                    ckv[:, s - keep:].astype(jnp.bfloat16)),
+                    ckv[:, s - keep:].astype(new_cache.ckv.dtype)),
                 krope=new_cache.krope.at[:, slots].set(
-                    kr[:, s - keep:].astype(jnp.bfloat16)))
+                    kr[:, s - keep:].astype(new_cache.krope.dtype)))
     else:  # decode, absorbed
         w = cache.ckv.shape[1]
         slot = (pos % w).astype(jnp.int32)[None]
         new_cache = kvcache.MLACache(
-            ckv=cache.ckv.at[:, slot].set(ckv.astype(jnp.bfloat16)),
-            krope=cache.krope.at[:, slot].set(kr.astype(jnp.bfloat16)))
+            ckv=cache.ckv.at[:, slot].set(ckv.astype(cache.ckv.dtype)),
+            krope=cache.krope.at[:, slot].set(kr.astype(cache.krope.dtype)))
         ckv_all = new_cache.ckv.astype(jnp.float32)       # (B, W, r)
         kr_all = new_cache.krope.astype(jnp.float32)      # (B, W, rd)
         q_abs = jnp.einsum("bhn,rhn->bhr", qn[:, 0].astype(jnp.float32),

@@ -34,6 +34,7 @@ def test_head_backbone_isolated_by_default(head_cfg):
     assert float(jnp.max(jnp.abs(g))) == 0.0
 
 
+@pytest.mark.slow
 def test_head_trains_on_separable_features(head_cfg):
     """Pooled states with class structure: the head must learn them."""
     key = jax.random.PRNGKey(2)

@@ -20,6 +20,7 @@ def smoke_cfg():
     return get_config("llama3p2_3b", smoke=True)
 
 
+@pytest.mark.slow
 def test_train_loss_decreases(smoke_cfg):
     out = train_mod.train(smoke_cfg, steps_total=12, batch=4, seq=64,
                           lr=3e-3, verbose=False, compute_dtype=None)
@@ -28,6 +29,7 @@ def test_train_loss_decreases(smoke_cfg):
     assert losses[-1] < losses[0], f"{losses[0]} -> {losses[-1]}"
 
 
+@pytest.mark.slow
 def test_train_checkpoint_restart(tmp_path, smoke_cfg):
     """Kill training mid-run; restart continues from the checkpoint and
     the step counter in the optimizer state is preserved."""
@@ -45,6 +47,7 @@ def test_train_checkpoint_restart(tmp_path, smoke_cfg):
     assert int(out2["opt_state"].step) == 10
 
 
+@pytest.mark.slow
 def test_train_preemption(tmp_path, smoke_cfg):
     ckpt = str(tmp_path / "ckpt")
     guard = fault.PreemptionGuard()
@@ -58,6 +61,7 @@ def test_train_preemption(tmp_path, smoke_cfg):
     assert checkpoint.latest_step(ckpt) == 1
 
 
+@pytest.mark.slow
 def test_train_microbatched_equals_full_batch(smoke_cfg):
     """Grad accumulation must give the same first-step loss/update
     direction as the single-batch step (same data, same math mod fp error)."""

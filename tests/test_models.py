@@ -41,6 +41,7 @@ def test_smoke_forward_shapes_and_finite(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_smoke_train_step_improves_loss(arch):
     """One gradient step on one batch must reduce its loss."""
     from repro.launch import steps
@@ -62,6 +63,7 @@ def test_smoke_train_step_improves_loss(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_prefill_decode_matches_teacher_forcing(arch):
     """decode(t) logits == forward_train logits at position t.
 

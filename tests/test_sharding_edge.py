@@ -1,0 +1,117 @@
+"""Resolver edge cases beyond the seed contract, plus a host-mesh lowering
+smoke test for the ULEEN production cell."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as sh
+from repro.launch.mesh import make_host_mesh
+
+
+def _fake_mesh(shape=(4, 2), axes=("data", "model")):
+    m = types.SimpleNamespace()
+    m.axis_names = axes
+    m.devices = np.empty(shape, dtype=object)
+    return m
+
+
+def test_empty_logical_tuple_is_replicated():
+    mesh = _fake_mesh()
+    assert sh.TRAIN_RULES.resolve((), mesh) == P()
+    assert sh.TRAIN_RULES.resolve((), mesh, shape=()) == P()
+
+
+def test_host_mesh_resolves_everything_to_noop():
+    """Size-1 mesh axes never appear in a spec: the 1-device host mesh is a
+    universal no-op, so test/example code paths never reshard."""
+    mesh = make_host_mesh()
+    for rules in (sh.TRAIN_RULES, sh.SERVE_RULES):
+        for name in rules.rules:
+            spec = rules.resolve((name,), mesh, shape=(1024,))
+            assert spec == P(None), (name, spec)
+    spec = sh.TRAIN_RULES.resolve(("batch", "heads", "ctx", None), mesh,
+                                  shape=(8, 4, 64, 16))
+    assert spec == P(None, None, None, None)
+
+
+def test_unknown_logical_axis_raises():
+    mesh = _fake_mesh()
+    with pytest.raises(ValueError, match="unknown logical axis"):
+        sh.TRAIN_RULES.resolve(("definitely_not_an_axis",), mesh)
+
+
+def test_shape_rank_mismatch_raises():
+    mesh = _fake_mesh()
+    with pytest.raises(ValueError, match="dims"):
+        sh.TRAIN_RULES.resolve(("batch", "seq"), mesh, shape=(8,))
+
+
+def test_none_dims_stay_unsharded():
+    mesh = _fake_mesh((4, 2))
+    spec = sh.TRAIN_RULES.resolve((None, "batch", None), mesh,
+                                  shape=(3, 8, 5))
+    assert spec == P(None, "data", None)
+
+
+def test_strip_axis_returns_new_rules():
+    stripped = sh.strip_axis(sh.TRAIN_RULES, "model")
+    assert stripped.rules["tp"] == ()
+    assert sh.TRAIN_RULES.rules["tp"] == ("model",)   # original untouched
+    mesh = _fake_mesh((4, 2))
+    assert stripped.resolve(("heads",), mesh, shape=(4,)) == P(None)
+
+
+def test_serve_kv_heads_yield_cache_seq():
+    """SERVE_RULES deliberately keep kv_heads whole even when divisible —
+    the decode ring buffer (cache_seq) owns `model`."""
+    mesh = _fake_mesh((4, 4))
+    spec = sh.SERVE_RULES.resolve(("kv_heads",), mesh, shape=(8,))
+    assert spec == P(None)
+    spec = sh.SERVE_RULES.resolve(("cache_seq",), mesh, shape=(1024,))
+    assert spec == P("model")
+
+
+def test_logical_constraint_applies_inside_mesh():
+    mesh = make_host_mesh()
+    with sh.use_mesh(mesh, sh.SERVE_RULES):
+        assert sh.current_context() == (mesh, sh.SERVE_RULES)
+        y = jax.jit(lambda x: sh.logical_constraint(
+            x + 1, ("batch", "cache_seq")))(jnp.zeros((2, 8)))
+    assert sh.current_context() is None
+    np.testing.assert_array_equal(np.asarray(y), np.ones((2, 8)))
+
+
+def test_use_mesh_restores_outer_context():
+    mesh = make_host_mesh()
+    with sh.use_mesh(mesh, sh.TRAIN_RULES):
+        with sh.use_mesh(mesh, sh.SERVE_RULES):
+            assert sh.current_context()[1] is sh.SERVE_RULES
+        assert sh.current_context()[1] is sh.TRAIN_RULES
+
+
+def test_uleen_cell_lowers_on_host_mesh():
+    """The paper's distributed train step lowers end-to-end through the
+    rule system on the 1-device mesh (the dry-run path, CPU-sized)."""
+    from repro.launch import uleen_cell
+    from repro.train import optimizer as opt_lib
+
+    mesh = make_host_mesh()
+    spec = uleen_cell.ULN_L_SPEC
+    optimizer = opt_lib.adam(1e-3)
+    step = uleen_cell.make_uleen_train_step(spec, optimizer)
+    ins, shard = uleen_cell.uleen_cell_specs(spec, mesh, global_batch=32)
+    opt_spec = jax.eval_shape(optimizer.init, ins["params"])
+    rep = sh.named_sharding(mesh, sh.TRAIN_RULES, ())
+    opt_shard = jax.tree.map(lambda _: rep, opt_spec)
+    with sh.use_mesh(mesh, sh.TRAIN_RULES):
+        lowered = jax.jit(step, in_shardings=(
+            shard["params"], opt_shard, shard["statics"], shard["bits"],
+            shard["labels"], shard["rng"])).lower(
+            ins["params"], opt_spec, ins["statics"], ins["bits"],
+            ins["labels"], ins["rng"])
+    text = lowered.as_text()
+    assert "module" in text and "func" in text, text[:200]

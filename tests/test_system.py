@@ -21,6 +21,8 @@ from repro.core.pruning import prune_and_finetune
 from repro.data.synth import make_mnist_like
 from repro.kernels import ops
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def pipeline():

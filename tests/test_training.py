@@ -67,11 +67,13 @@ def multishot_result(tiny_spec, tiny_statics, encoded):
         MultiShotConfig(epochs=20, batch_size=128, learning_rate=1e-2))
 
 
+@pytest.mark.slow
 def test_multi_shot_loss_decreases(multishot_result):
     losses = [h["loss"] for h in multishot_result.history]
     assert losses[-1] < losses[0] * 0.8
 
 
+@pytest.mark.slow
 def test_multi_shot_beats_one_shot(tiny_spec, tiny_statics, encoded,
                                    oneshot_model, multishot_result):
     """The paper's core training claim (§V-B)."""
@@ -81,6 +83,7 @@ def test_multi_shot_beats_one_shot(tiny_spec, tiny_statics, encoded,
     assert multishot_result.val_accuracy > acc_os
 
 
+@pytest.mark.slow
 def test_binarized_matches_continuous_inference(tiny_spec, tiny_statics,
                                                 encoded, multishot_result):
     """Deployment path: binary tables + popcount == STE forward at eval.
@@ -98,6 +101,7 @@ def test_binarized_matches_continuous_inference(tiny_spec, tiny_statics,
                                   np.asarray(binary))
 
 
+@pytest.mark.slow
 def test_prune_mask_counts(tiny_spec, tiny_statics, encoded,
                            multishot_result):
     bits_tr, y_tr, _, _ = encoded
@@ -112,6 +116,7 @@ def test_prune_mask_counts(tiny_spec, tiny_statics, encoded,
         assert (per_class == expect).all()
 
 
+@pytest.mark.slow
 def test_prune_30pct_keeps_accuracy(tiny_spec, tiny_statics, encoded,
                                     multishot_result):
     """Paper §V-F1: ~30% pruning costs almost nothing after fine-tune."""
