@@ -1,40 +1,82 @@
-"""Batched serving example: prefill + decode over every cache family.
+"""Serving example: every cache family, synchronous and continuous.
 
 Spins up three smoke-size models with different sequence mixers — GQA ring
 buffer (mixtral SWA), Mamba-2 SSM state, RG-LRU recurrent state — and
-serves a batch of prompts through the same prefill/decode driver the
-dry-run compiles for the production mesh.
+serves them two ways:
+
+1. one synchronous batch through `serve()` (prefill + lockstep decode);
+2. a Poisson request stream through the continuous-batching engine
+   (`repro.launch.scheduler.Engine`): more requests than cache slots, with
+   mixed prompt/generation lengths, admitted into freed slots mid-decode.
+
+Greedy decode makes the two paths comparable token-for-token, so this
+host-mesh example doubles as a service smoke test (DESIGN §6).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import get_config
+from repro.launch.scheduler import Engine, synth_request_stream
 from repro.launch.serve import serve
 from repro.models import transformer
 
 ARCHS = ["mixtral_8x7b", "mamba2_2p7b", "recurrentgemma_2b"]
+MAX_LEN = 64
 
 
 def main():
     for arch in ARCHS:
         cfg = get_config(arch, smoke=True)
+        if cfg.num_experts:
+            # lift expert capacity so routing never drops tokens: MoE
+            # capacity is contested across the batch, and a dropped token
+            # would make batch-1 and batch-4 decode diverge (same move as
+            # tests/test_models.py).
+            cfg = dataclasses.replace(cfg, capacity_factor=8.0)
         key = jax.random.PRNGKey(0)
         params = transformer.init_params(cfg, key)
         prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 24), 0,
                                      cfg.vocab_size, jnp.int32)
         t0 = time.time()
-        toks = serve(cfg, params, prompts, max_len=64, gen=16)
+        toks = serve(cfg, params, prompts, max_len=MAX_LEN, gen=16)
         dt = time.time() - t0
         # same prompts -> deterministic greedy output
-        toks2 = serve(cfg, params, prompts, max_len=64, gen=16)
+        toks2 = serve(cfg, params, prompts, max_len=MAX_LEN, gen=16)
         assert (jnp.asarray(toks) == jnp.asarray(toks2)).all()
-        print(f"{cfg.name:24s} generated {toks.shape[1]} tokens x "
+        print(f"{cfg.name:24s} sync   {toks.shape[1]} tokens x "
               f"{toks.shape[0]} requests in {dt:5.2f}s "
               f"| sample: {toks[0, :8].tolist()}")
+
+        # continuous batching: 8 requests > 3 slots, mixed lengths, Poisson
+        # arrivals; every request must match the synchronous path.
+        stream = synth_request_stream(cfg, 8, rate=200.0, seed=2,
+                                      prompt_lens=(8, 16, 24),
+                                      gen_lens=(6, 12, 16))
+        eng = Engine(cfg, params, slots=3, max_len=MAX_LEN)
+        t0 = time.time()
+        results = eng.run(stream)
+        dt = time.time() - t0
+        for req, res in zip(sorted(stream, key=lambda r: r.arrival),
+                            results):
+            assert len(res.tokens) == req.max_new, (res.rid, res.tokens)
+            ref = np.asarray(serve(cfg, params,
+                                   jnp.asarray(req.tokens)[None],
+                                   max_len=MAX_LEN, gen=req.max_new))[0]
+            assert (np.array(res.tokens) == ref).all(), \
+                f"{cfg.name} engine diverged from sync serve on rid " \
+                f"{res.rid}"
+        st = eng.stats()
+        print(f"{cfg.name:24s} stream {st['tokens']} tokens / "
+              f"{st['requests']} requests in {dt:5.2f}s "
+              f"| {st['decode_steps']} decode steps, peak "
+              f"{st['peak_active']}/3 slots, mean latency "
+              f"{st['latency_mean_s']:.3f}s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,372 @@
+"""Continuous-batching serve engine: request queue + slot scheduler.
+
+The synchronous driver (`repro.launch.serve.serve`) prefills one fixed
+batch and decodes it in lockstep, so a finished sequence leaves its cache
+slot idle until the whole batch drains. This module keeps every KV-cache
+slot busy every decode step instead — the serving analogue of the paper's
+FPGA pipeline keeping every LUT busy every cycle (DESIGN §6):
+
+* requests enter a FIFO queue (`Engine.submit`);
+* each cache row is a *slot* with lifecycle FREE -> PREFILL -> DECODE ->
+  DRAIN -> FREE;
+* whenever a slot frees, the scheduler pops the queue and prefills the
+  request into that row with a fixed-shape `slot_prefill_step`
+  (`repro.launch.steps`), then the slot joins the already-running masked
+  decode batch mid-flight — no recompilation, no barrier on neighbours.
+
+Shape discipline (DESIGN §6): the decode step is compiled exactly once
+for (slots, max_len); prefill compiles once per prompt-length bucket.
+`Engine.trace_counts` counts retraces so tests can assert the steady
+state compiles nothing.
+
+Host-mesh smoke usage:
+
+    eng = Engine(cfg, params, slots=4, max_len=64)
+    eng.submit(prompt_tokens, max_new=16)
+    results = eng.drain()          # -> [RequestResult]
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import time
+from typing import Any, Callable, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist import sharding as sh
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer
+
+
+class SlotState(enum.Enum):
+    FREE = "free"          # no request; row contents are dead
+    PREFILL = "prefill"    # request admitted this step, cache being built
+    DECODE = "decode"      # live: emits one token per engine step
+    DRAIN = "drain"        # finished; result finalised, row reclaimed at
+    #                        the next admission scan
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `tokens` is the unpadded prompt (plen,)."""
+    tokens: np.ndarray
+    max_new: int
+    rid: int = -1                      # assigned by Engine.submit
+    arrival: float = 0.0               # stream offset (s) for run(realtime=)
+    frames: Optional[np.ndarray] = None    # (F, D) whisper encoder frames
+    patches: Optional[np.ndarray] = None   # (P, D) vision patch embeddings
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[0])
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: List[int]                  # generated ids, len == max_new
+    t_submit: float
+    t_admit: float = 0.0
+    t_first: float = 0.0               # first token (end of prefill)
+    t_done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_admit - self.t_submit
+
+
+@dataclasses.dataclass
+class _Slot:
+    state: SlotState = SlotState.FREE
+    request: Optional[Request] = None
+    result: Optional[RequestResult] = None
+    key: Any = None                    # per-request PRNG (sampled decode)
+
+
+def _bucket_pow2(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class Engine:
+    """Step-driven continuous-batching engine over one ServeState.
+
+    Parameters
+    ----------
+    slots: batch width of the decode step == number of concurrent requests.
+    max_len: cache width; every request needs prompt_len + max_new <= max_len.
+    bucket: None -> prefill compiles per exact prompt length; "pow2" ->
+        prompts are right-padded to the next power-of-two bucket and the
+        length-aware prefill masks the tail. Padded prefill is only sound
+        for full-width attention caches (DESIGN §6), so "pow2" asserts
+        eligibility at construction.
+    greedy/rng/temperature: token selection, mirroring `serve()`. Sampled
+        decode draws from a per-request key (fold_in by rid) so outputs do
+        not depend on which slot or step a request lands in.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 128, mesh=None, greedy: bool = True,
+                 rng=None, temperature: float = 1.0,
+                 bucket: Optional[str] = None, clock: Callable = None):
+        if bucket not in (None, "pow2"):
+            raise ValueError(f"unknown bucket policy {bucket!r}")
+        if bucket == "pow2" and not self._bucket_eligible(cfg):
+            raise ValueError(
+                "bucketed (padded) prefill needs full-width attention "
+                "caches: windowed/SSM/recurrent state folds padding in "
+                f"sequentially ({cfg.name})")
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = slots
+        self.max_len = max_len
+        self.mesh = mesh or make_host_mesh()
+        self.rules = sh.SERVE_RULES
+        self.greedy = greedy
+        self.temperature = temperature
+        self.bucket = bucket
+        self.clock = clock or time.perf_counter
+        self._base_key = rng if rng is not None else jax.random.PRNGKey(0)
+
+        # trace-time side effects: these counters move only when jax traces
+        # (== compiles) a new program, so tests can assert the warm engine
+        # never recompiles.
+        self.trace_counts: collections.Counter = collections.Counter()
+
+        prefill = steps.make_slot_prefill_step(cfg, max_len=max_len)
+        decode = steps.make_masked_decode_step(cfg)
+
+        def _prefill(params, batch, length, slot, state):
+            self.trace_counts[
+                f"prefill_{batch['tokens'].shape[1]}"] += 1
+            return prefill(params, batch, length, slot, state)
+
+        def _decode(params, token, state, active):
+            self.trace_counts["decode"] += 1
+            return decode(params, token, state, active)
+
+        self._prefill = jax.jit(_prefill, donate_argnums=(4,))
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+        with sh.use_mesh(self.mesh, self.rules):
+            self.state = steps.serve_state_zeros(cfg, params, slots, max_len)
+        self.slots = [_Slot() for _ in range(slots)]
+        self.queue: collections.deque = collections.deque()
+        self._next_tok = np.zeros((slots,), np.int32)
+        self.results: dict = {}
+        self._next_rid = 0
+        self.step_count = 0
+        self.peak_active = 0
+        self.dropped = 0
+
+    # -- scheduling ---------------------------------------------------------
+
+    @staticmethod
+    def _bucket_eligible(cfg: ArchConfig) -> bool:
+        mixers = {ls.mixer for seg in transformer.arch_segments(cfg)
+                  for ls in seg.layers}
+        return (mixers <= {"attn", "mla"} and not cfg.sliding_window
+                and not cfg.block_pattern and not cfg.patch_tokens)
+
+    def submit(self, tokens, max_new: int, *, frames=None,
+               patches=None, arrival: float = 0.0) -> int:
+        """Queue one request; returns its rid. Never drops: a full engine
+        only deepens the queue (slot exhaustion queues, DESIGN §6)."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        req = Request(tokens=tokens, max_new=int(max_new), arrival=arrival,
+                      frames=None if frames is None else np.asarray(frames),
+                      patches=None if patches is None else
+                      np.asarray(patches))
+        if req.prompt_len < 1 or req.max_new < 1:
+            raise ValueError("need prompt_len >= 1 and max_new >= 1")
+        plen = self._padded_len(req.prompt_len)
+        # patch tokens prepend to the decoder sequence and occupy cache
+        # rows ahead of the prompt, so they count against the ring buffer.
+        need = (self.cfg.patch_tokens or 0) + plen + req.max_new
+        if need > self.max_len:
+            raise ValueError(
+                f"request needs {need} cache rows (patches + prompt + "
+                f"max_new), engine max_len is {self.max_len}")
+        req.rid = self._next_rid
+        self._next_rid += 1
+        self.results[req.rid] = RequestResult(
+            rid=req.rid, prompt_len=req.prompt_len, tokens=[],
+            t_submit=self.clock())
+        self.queue.append(req)
+        return req.rid
+
+    def _padded_len(self, plen: int) -> int:
+        return _bucket_pow2(plen) if self.bucket == "pow2" else plen
+
+    def _select(self, logits_last, slot: Optional[_Slot] = None) -> int:
+        """Next token from (V,) logits: greedy argmax (bit-compatible with
+        `serve()`) or per-request categorical sample."""
+        if self.greedy:
+            return int(jnp.argmax(logits_last))
+        slot.key, sub = jax.random.split(slot.key)
+        return int(jax.random.categorical(
+            sub, logits_last / self.temperature))
+
+    def _admit(self):
+        """Reclaim DRAIN slots, then pop the queue into FREE rows: batch-1
+        prefill-into-slot + first token from the prefill logits."""
+        for sl in self.slots:
+            if sl.state is SlotState.DRAIN:
+                sl.state = SlotState.FREE
+                sl.request = sl.result = None
+        for i, sl in enumerate(self.slots):
+            if not self.queue or sl.state is not SlotState.FREE:
+                continue
+            req = self.queue.popleft()
+            res = self.results[req.rid]
+            sl.state = SlotState.PREFILL
+            sl.request = req
+            sl.result = res
+            sl.key = jax.random.fold_in(self._base_key, req.rid)
+            res.t_admit = self.clock()
+
+            plen = self._padded_len(req.prompt_len)
+            toks = np.zeros((1, plen), np.int32)
+            toks[0, :req.prompt_len] = req.tokens
+            batch = {"tokens": jnp.asarray(toks)}
+            if req.frames is not None:
+                batch["frames"] = jnp.asarray(req.frames)[None]
+            if req.patches is not None:
+                batch["patches"] = jnp.asarray(req.patches)[None]
+            with sh.use_mesh(self.mesh, self.rules):
+                logits, self.state = self._prefill(
+                    self.params, batch,
+                    jnp.asarray(req.prompt_len, jnp.int32),
+                    jnp.asarray(i, jnp.int32), self.state)
+            tok = self._select(logits[0, -1], sl)
+            res.tokens.append(tok)
+            res.t_first = self.clock()
+            self._next_tok[i] = tok
+            self._finish_if_done(i, sl)
+            if sl.state is SlotState.PREFILL:
+                sl.state = SlotState.DECODE
+
+    def _finish_if_done(self, i: int, sl: _Slot):
+        if len(sl.result.tokens) >= sl.request.max_new:
+            sl.result.t_done = self.clock()
+            sl.state = SlotState.DRAIN
+
+    def step(self) -> int:
+        """One engine step: admissions, then one masked decode over every
+        slot. Returns the number of live slots that emitted a token."""
+        self._admit()
+        active = np.array([sl.state is SlotState.DECODE
+                           for sl in self.slots])
+        self.peak_active = max(self.peak_active, int(active.sum()))
+        if not active.any():
+            return 0
+        with sh.use_mesh(self.mesh, self.rules):
+            logits, self.state = self._decode(
+                self.params, jnp.asarray(self._next_tok[:, None]),
+                self.state, jnp.asarray(active))
+        self.step_count += 1
+        emitted = 0
+        last = logits[:, -1]
+        if self.greedy:   # one batched argmax + one transfer per step,
+            sel = np.asarray(jnp.argmax(last, axis=-1))  # not one per slot
+        for i, sl in enumerate(self.slots):
+            if not active[i]:
+                continue
+            tok = int(sel[i]) if self.greedy else self._select(last[i], sl)
+            sl.result.tokens.append(tok)
+            self._next_tok[i] = tok
+            emitted += 1
+            self._finish_if_done(i, sl)
+        return emitted
+
+    # -- drivers ------------------------------------------------------------
+
+    def busy(self) -> bool:
+        return bool(self.queue) or any(
+            sl.state in (SlotState.PREFILL, SlotState.DECODE, SlotState.DRAIN)
+            for sl in self.slots)
+
+    def drain(self) -> List[RequestResult]:
+        """Run until queue and slots are empty; results in rid order."""
+        while self.busy():
+            self.step()
+        return [self.results[rid] for rid in sorted(self.results)]
+
+    def run(self, requests: Iterable[Request], *,
+            realtime: bool = False) -> List[RequestResult]:
+        """Drain a request stream. With realtime=True each request is held
+        back until wall clock passes its `arrival` offset (Poisson arrivals
+        from `synth_request_stream`); otherwise requests are submitted in
+        arrival order and admission is governed purely by slot pressure."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        t0 = self.clock()
+        while pending or self.busy():
+            now = self.clock() - t0
+            while pending and (not realtime or pending[0].arrival <= now):
+                r = pending[0]
+                self.submit(r.tokens, r.max_new, frames=r.frames,
+                            patches=r.patches, arrival=r.arrival)
+                pending.pop(0)
+            if self.busy():
+                self.step()
+            elif pending:
+                time.sleep(min(0.001, pending[0].arrival - now))
+        return [self.results[rid] for rid in sorted(self.results)]
+
+    def stats(self) -> dict:
+        done = [r for r in self.results.values() if r.t_done]
+        if not done:
+            return {"requests": 0}
+        lat = sorted(r.latency for r in done)
+        toks = sum(len(r.tokens) for r in done)
+        span = max(r.t_done for r in done) - min(r.t_submit for r in done)
+        return {
+            "requests": len(done),
+            "tokens": toks,
+            "tok_per_s": toks / span if span > 0 else float("inf"),
+            "latency_mean_s": sum(lat) / len(lat),
+            "latency_p50_s": lat[len(lat) // 2],
+            "latency_max_s": lat[-1],
+            "queue_wait_mean_s": sum(r.queue_wait for r in done) / len(done),
+            "decode_steps": self.step_count,
+            "peak_active": self.peak_active,
+        }
+
+
+def synth_request_stream(cfg: ArchConfig, n: int, *, rate: float = 32.0,
+                         seed: int = 0, prompt_lens=(8, 16, 24),
+                         gen_lens=(4, 8, 16)) -> List[Request]:
+    """n synthetic requests with Poisson arrivals (exponential gaps at
+    `rate` req/s) and mixed prompt/generation lengths — the CLI's --stream
+    workload and the service smoke test's traffic model."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        plen = int(rng.choice(prompt_lens))
+        req = Request(
+            tokens=rng.integers(0, cfg.vocab_size, size=(plen,),
+                                dtype=np.int32),
+            max_new=int(rng.choice(gen_lens)), arrival=t)
+        if cfg.encoder_layers:
+            req.frames = (rng.standard_normal(
+                (cfg.encoder_frames, cfg.d_model)) * 0.02).astype(np.float32)
+        if cfg.patch_tokens:
+            req.patches = (rng.standard_normal(
+                (cfg.patch_tokens, cfg.d_model)) * 0.02).astype(np.float32)
+        out.append(req)
+    return out

@@ -1,4 +1,10 @@
-"""Batched serving driver: prefill + decode loop over ServeState.
+"""Serving drivers: synchronous fixed batch + continuous-batching stream.
+
+`serve()` prefills one batch and decodes it in lockstep — the reference
+path (and the parity oracle for the engine tests). `serve_stream()` drains
+an async request stream through `repro.launch.scheduler.Engine`: queued
+prompts are admitted into KV-cache slots as they free up mid-decode, so
+the batch never idles on its slowest member (DESIGN §6).
 
 Runs smoke configs on the host mesh in this container; the production
 mesh path is exercised by the dry-run (same step functions, same
@@ -6,6 +12,8 @@ shardings).
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x7b \
         --smoke --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3p2_3b \
+        --smoke --stream --requests 16 --rate 64 --slots 4
 """
 from __future__ import annotations
 
@@ -54,6 +62,32 @@ def serve(cfg, params, prompts, *, max_len: int, gen: int,
         return jnp.concatenate(outs, axis=1)
 
 
+def serve_stream(cfg, params, requests, *, slots: int, max_len: int,
+                 mesh=None, greedy: bool = True, rng=None,
+                 temperature: float = 1.0, realtime: bool = True,
+                 verbose: bool = True):
+    """Drain a request stream through the continuous-batching engine;
+    returns (results, engine). `requests` is an iterable of
+    `scheduler.Request` (see `scheduler.synth_request_stream`)."""
+    from repro.launch.scheduler import Engine
+    eng = Engine(cfg, params, slots=slots, max_len=max_len, mesh=mesh,
+                 greedy=greedy, rng=rng, temperature=temperature)
+    results = eng.run(requests, realtime=realtime)
+    if verbose:
+        st = eng.stats()
+        if not st["requests"]:
+            print(f"[serve] {cfg.name}: no requests completed")
+            return results, eng
+        print(f"[serve] {cfg.name}: {st['requests']} requests, "
+              f"{st['tokens']} tokens in {st['decode_steps']} decode steps "
+              f"({st['tok_per_s']:.1f} tok/s, peak {st['peak_active']}/"
+              f"{slots} slots)")
+        print(f"[serve] latency mean/p50/max = {st['latency_mean_s']:.3f}/"
+              f"{st['latency_p50_s']:.3f}/{st['latency_max_s']:.3f} s, "
+              f"queue wait mean = {st['queue_wait_mean_s']:.3f} s")
+    return results, eng
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
@@ -62,25 +96,53 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous batching: Poisson request stream "
+                         "through the slot scheduler instead of one "
+                         "synchronous batch")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="[--stream] number of requests")
+    ap.add_argument("--rate", type=float, default=64.0,
+                    help="[--stream] Poisson arrival rate, req/s")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="[--stream] cache slots (default: --batch)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    # independent streams: the same key must never both initialise params
+    # and sample data (prompt tokens correlated with embedding rows).
     key = jax.random.PRNGKey(args.seed)
-    params = transformer.init_params(cfg, key, dtype=jnp.float32)
+    k_param, k_prompt, k_frames, k_patches = jax.random.split(key, 4)
+    params = transformer.init_params(cfg, k_param, dtype=jnp.float32)
+
+    if args.stream:
+        from repro.launch.scheduler import synth_request_stream
+        # patch tokens prepend to the decoder sequence -> cache rows
+        max_len = (cfg.patch_tokens or 0) + args.prompt_len + args.gen + 1
+        reqs = synth_request_stream(
+            cfg, args.requests, rate=args.rate, seed=args.seed,
+            prompt_lens=(max(1, args.prompt_len // 2), args.prompt_len),
+            gen_lens=(max(1, args.gen // 2), args.gen))
+        serve_stream(cfg, params, reqs, slots=args.slots or args.batch,
+                     max_len=max_len)
+        return 0
+
     prompts = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
+        k_prompt, (args.batch, args.prompt_len), 0, cfg.vocab_size,
+        jnp.int32)
     kwargs = {}
     if cfg.encoder_layers:
         kwargs["frames"] = jax.random.normal(
-            key, (args.batch, cfg.encoder_frames, cfg.d_model)) * 0.02
+            k_frames, (args.batch, cfg.encoder_frames, cfg.d_model)) * 0.02
     if cfg.patch_tokens:
         kwargs["patches"] = jax.random.normal(
-            key, (args.batch, cfg.patch_tokens, cfg.d_model)) * 0.02
+            k_patches, (args.batch, cfg.patch_tokens, cfg.d_model)) * 0.02
 
     t0 = time.time()
     toks = serve(cfg, params, prompts,
-                 max_len=args.prompt_len + args.gen + 1, gen=args.gen,
-                 **kwargs)
+                 max_len=(cfg.patch_tokens or 0) + args.prompt_len
+                 + args.gen + 1,
+                 gen=args.gen, **kwargs)
     dt = time.time() - t0
     print(f"[serve] {cfg.name}: generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")

@@ -64,6 +64,49 @@ def input_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh, rules) -> dict:
             for k, v in specs.items()}
 
 
+def engine_input_specs(cfg: ArchConfig, prompt_len: int,
+                       slots: int) -> dict:
+    """Stand-ins for the continuous-batching engine's per-step data
+    arguments (DESIGN §6): the batch-1 slot-prefill request plus the
+    batch-wide masked-decode feed. Everything here is fixed-shape for a
+    given (prompt bucket, slots), which is the engine's no-recompilation
+    invariant."""
+    i32 = jnp.int32
+    specs = {
+        # slot prefill: one request, right-padded to its bucket
+        "tokens": jax.ShapeDtypeStruct((1, prompt_len), i32),
+        "length": jax.ShapeDtypeStruct((), i32),
+        "slot": jax.ShapeDtypeStruct((), i32),
+        # masked decode over every slot
+        "token": jax.ShapeDtypeStruct((slots, 1), i32),
+        "active": jax.ShapeDtypeStruct((slots,), jnp.bool_),
+    }
+    if cfg.encoder_layers:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (1, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    if cfg.patch_tokens:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (1, cfg.patch_tokens, cfg.d_model), jnp.float32)
+    return specs
+
+
+# logical axes of the engine's data arguments — single source of truth
+# for engine_input_shardings and the scheduler tests.
+ENGINE_INPUT_LOGICAL = {
+    "tokens": ("batch", "seq"), "length": (), "slot": (),
+    "token": ("batch", None), "active": ("batch",),
+    "frames": ("batch", None, None), "patches": ("batch", None, None),
+}
+
+
+def engine_input_shardings(cfg: ArchConfig, prompt_len: int, slots: int,
+                           mesh, rules) -> dict:
+    specs = engine_input_specs(cfg, prompt_len, slots)
+    return {k: sh.named_sharding(mesh, rules, ENGINE_INPUT_LOGICAL[k],
+                                 shape=v.shape)
+            for k, v in specs.items()}
+
+
 # ---------------------------------------------------------------------------
 # Parameter / optimizer specs
 # ---------------------------------------------------------------------------
@@ -152,7 +195,7 @@ def cache_shardings(cfg: ArchConfig, state_spec, mesh, rules):
             if isinstance(p, jtu.GetAttrKey) and p.name in _BASE_NDIM:
                 field = p.name
                 break
-        if field is None:   # pos scalar or cross (k, v) tuples
+        if field is None:   # pos vector (B,) or cross (k, v) tuples
             if leaf.ndim == 0:
                 return sh.named_sharding(mesh, rules, ())
             if leaf.ndim >= 4:   # cross kv: (B, Hkv, F, hd), maybe stacked

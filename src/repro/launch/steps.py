@@ -184,6 +184,87 @@ def make_decode_step(cfg: ArchConfig, *, compute_dtype=None) -> Callable:
     return decode_step
 
 
+def write_state_slot(full, one, index):
+    """Write a batch-1 ServeState into row `index` of a batch-wide state.
+
+    Core primitive of prefill-into-slot (DESIGN §6): every leaf of the
+    batch-1 tree is spliced into the batch-wide tree along its batch axis
+    with a dynamic_update_slice, so the operation is fixed-shape and
+    jit-compiles once regardless of which slot it targets. The batch axis
+    is found per leaf by shape comparison — stacked cache leaves carry a
+    leading layer axis, so batch is not always axis 0.
+    """
+    def upd(f, o):
+        diff = [a for a, (fd, od) in enumerate(zip(f.shape, o.shape))
+                if fd != od]
+        if not diff:          # single-slot engine: the row is the whole state
+            return o.astype(f.dtype)
+        assert len(diff) == 1, (f.shape, o.shape)
+        return jax.lax.dynamic_update_slice_in_dim(
+            f, o.astype(f.dtype), index, axis=diff[0])
+    return jax.tree.map(upd, full, one)
+
+
+def make_slot_prefill_step(cfg: ArchConfig, *, max_len: int,
+                           compute_dtype=None) -> Callable:
+    """(params, batch, length, slot, state) -> (last logits, state').
+
+    Prefills ONE request (batch-1 `batch["tokens"]`, optionally padded to a
+    fixed bucket with `length` real tokens) against a fresh width-max_len
+    cache and writes the result into row `slot` of the engine's batch-wide
+    ServeState. Shapes are fixed per (prompt bucket), so a serving engine
+    compiles one program per bucket at warmup and admits requests into
+    freed slots mid-decode without recompiling (DESIGN §6).
+    """
+    def slot_prefill_step(params, batch, length, slot, state):
+        if compute_dtype is not None:
+            params = cast_tree(params, compute_dtype)
+        logits, one = transformer.forward_prefill(
+            cfg, params, batch["tokens"], max_len=max_len,
+            frames=batch.get("frames"), patches=batch.get("patches"),
+            length=length)
+        return logits, write_state_slot(state, one, slot)
+    return slot_prefill_step
+
+
+def make_masked_decode_step(cfg: ArchConfig, *, compute_dtype=None) -> Callable:
+    """(params, token, state, active) -> (logits, state').
+
+    One decode step over every cache slot; `active` is a (B,) bool mask of
+    slots holding live requests. Inactive slots still flow through the
+    batch (shape-stable compilation — DESIGN §6) but their `pos` is frozen
+    so an idle slot neither drifts through its ring buffer nor changes
+    meaning between a request retiring and the next admission. Their cache
+    rows may accumulate garbage; prefill-into-slot fully overwrites the
+    visible prefix (pos ... kv_len) on admission, so no live slot can
+    observe it.
+    """
+    def masked_decode_step(params, token, state, active):
+        if compute_dtype is not None:
+            params = cast_tree(params, compute_dtype)
+        logits, new = transformer.forward_decode(cfg, params, token, state)
+        pos = jnp.where(active, new.pos, state.pos)
+        return logits, new._replace(pos=pos)
+    return masked_decode_step
+
+
+def serve_state_zeros(cfg: ArchConfig, params, slots: int, max_len: int):
+    """All-zero batch-wide ServeState for an engine with `slots` cache
+    rows: eval_shape over a 1-token prefill fixes the tree structure
+    (incl. whisper cross-kv and stacked-layer caches), then every leaf is
+    materialised as zeros. No prefill actually runs."""
+    specs = {"tokens": jax.ShapeDtypeStruct((slots, 1), jnp.int32)}
+    if cfg.encoder_layers:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (slots, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    if cfg.patch_tokens:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (slots, cfg.patch_tokens, cfg.d_model), jnp.float32)
+    step = make_prefill_step(cfg, max_len=max_len)
+    _, sspec = jax.eval_shape(step, params, specs)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sspec)
+
+
 def serve_state_spec(cfg: ArchConfig, batch: int, seq_len: int,
                      param_spec) -> Any:
     """Abstract ServeState after a seq_len prefill (for decode dry-runs):

@@ -70,12 +70,58 @@ def cache_write(cache: AttnCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     return AttnCache(k, v, None, None)
 
 
+def cache_write_at(cache: AttnCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                   slot: jnp.ndarray) -> AttnCache:
+    """Decode write: one new entry *per sequence* at per-sequence positions.
+
+    k_new/v_new: (B, Hkv, 1, hd); slot: (B,) int32. Unlike `cache_write`
+    (prefill: T entries at batch-shared positions) each sequence lands at
+    its own ring-buffer slot, which is what lets a continuous-batching
+    engine hold sequences at different depths in one cache (DESIGN §6).
+    """
+    quant = cache.k_scale is not None
+    if quant:
+        kq, ks = _quantize(k_new, cache.k.dtype)
+        vq, vs = _quantize(v_new, cache.v.dtype)
+    else:
+        kq, vq = k_new.astype(cache.k.dtype), v_new.astype(cache.v.dtype)
+
+    def upd(buf, val, s):
+        # buf: (Hkv, W, ...), val: (Hkv, 1, ...), s scalar
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, s, axis=1)
+
+    k = jax.vmap(upd)(cache.k, kq, slot)
+    v = jax.vmap(upd)(cache.v, vq, slot)
+    if quant:
+        return AttnCache(k, v,
+                         jax.vmap(upd)(cache.k_scale, ks, slot),
+                         jax.vmap(upd)(cache.v_scale, vs, slot))
+    return AttnCache(k, v, None, None)
+
+
 def cache_read(cache: AttnCache, dtype=jnp.bfloat16):
     if cache.k_scale is not None:
         k = cache.k.astype(jnp.float32) * cache.k_scale
         v = cache.v.astype(jnp.float32) * cache.v_scale
         return k.astype(dtype), v.astype(dtype)
     return cache.k.astype(dtype), cache.v.astype(dtype)
+
+
+def mla_cache_write_at(cache: "MLACache", ckv_new: jnp.ndarray,
+                       krope_new: jnp.ndarray, slot: jnp.ndarray) -> "MLACache":
+    """Per-sequence decode write for the MLA latent cache.
+
+    ckv_new: (B, 1, r); krope_new: (B, 1, rope_dim); slot: (B,) int32.
+    """
+    def upd(buf, val):
+        # buf: (W, d), val: (1, d), s scalar
+        def at(b, v, s):
+            return jax.lax.dynamic_update_slice_in_dim(
+                b, v.astype(b.dtype), s, axis=0)
+        return jax.vmap(at)(buf, val, slot)
+
+    return MLACache(ckv=upd(cache.ckv, ckv_new),
+                    krope=upd(cache.krope, krope_new))
 
 
 def init_mla_cache(batch: int, window: int, lora_rank: int,

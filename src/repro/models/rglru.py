@@ -76,7 +76,10 @@ def recurrent_block(cfg, p, x: jnp.ndarray, *, return_state: bool = False):
     bg = jax.nn.gelu(x @ p["w_in_gate"])           # (B, S, W)
     out = (br * bg) @ p["w_out"]
     if return_state:
-        conv = jnp.moveaxis(br_raw[:, x.shape[1] - (k - 1):, :], 1, 2)
+        # zero-pad at the front: prompts shorter than the conv kernel must
+        # still yield the fixed (B, W, K-1) decode state.
+        br_pad = jnp.pad(br_raw, ((0, 0), (k - 1, 0), (0, 0)))
+        conv = jnp.moveaxis(br_pad[:, x.shape[1]:, :], 1, 2)
         return out, RGState(conv=conv, h=h_last)
     return out
 

@@ -155,7 +155,11 @@ def mamba2_block(cfg, p, x: jnp.ndarray, *, return_state: bool = False):
     y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
     out = y @ p["out_proj"]
     if return_state:
-        conv = jnp.moveaxis(xbc_raw[:, s - (k - 1):, :], 1, 2)  # (B, C, K-1)
+        # last k-1 inputs, zero-padded at the front so prompts shorter than
+        # the conv kernel still yield the fixed (B, C, K-1) decode state
+        # (causal conv pads with zeros before the sequence start).
+        xbc_pad = jnp.pad(xbc_raw, ((0, 0), (k - 1, 0), (0, 0)))
+        conv = jnp.moveaxis(xbc_pad[:, s:, :], 1, 2)            # (B, C, K-1)
         return out, SSMState(conv=conv, state=state_fin)
     return out
 

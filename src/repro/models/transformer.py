@@ -325,16 +325,15 @@ def attn_mixer(cfg, p, x, positions, *, window: int, causal: bool = True,
             slots = (jnp.arange(s - keep, s) % w).astype(jnp.int32)
             new_cache = kvcache.cache_write(
                 new_cache, k[:, :, s - keep:], v[:, :, s - keep:], slots)
-    else:  # decode: x is (B, 1, D), pos scalar
+    else:  # decode: x is (B, 1, D), pos (B,) — one position per sequence
         w = cache.k.shape[2]
-        slot = (pos % w).astype(jnp.int32)[None]
-        new_cache = kvcache.cache_write(cache, k, v, slot)
+        slot = (pos % w).astype(jnp.int32)
+        new_cache = kvcache.cache_write_at(cache, k, v, slot)
         # bf16 cache read; scores accumulate f32 via preferred_element_type
         # (§Perf it.4 — an f32 dequant copy of the cache doubled decode
         # temp memory: qwen1.5 decode_32k 19.1 -> ~9 GiB/chip)
         kf, vf = kvcache.cache_read(new_cache, dtype=jnp.bfloat16)
-        valid = jnp.minimum(pos + 1, w)
-        kv_len = jnp.full((b,), valid, jnp.int32)
+        kv_len = jnp.minimum(pos + 1, w).astype(jnp.int32)
         out = decode_attention(q, kf, vf, kv_len=kv_len,
                                window=0)  # ring buffer already bounds window
     out = jnp.moveaxis(out, 1, 2).reshape(b, s, -1)
@@ -385,12 +384,10 @@ def mla_mixer(cfg, p, x, positions, *, mode: str = "train", cache=None,
                     ckv[:, s - keep:].astype(new_cache.ckv.dtype)),
                 krope=new_cache.krope.at[:, slots].set(
                     kr[:, s - keep:].astype(new_cache.krope.dtype)))
-    else:  # decode, absorbed
+    else:  # decode, absorbed; pos (B,) — one position per sequence
         w = cache.ckv.shape[1]
-        slot = (pos % w).astype(jnp.int32)[None]
-        new_cache = kvcache.MLACache(
-            ckv=cache.ckv.at[:, slot].set(ckv.astype(cache.ckv.dtype)),
-            krope=cache.krope.at[:, slot].set(kr.astype(cache.krope.dtype)))
+        slot = (pos % w).astype(jnp.int32)
+        new_cache = kvcache.mla_cache_write_at(cache, ckv, kr, slot)
         ckv_all = new_cache.ckv.astype(jnp.float32)       # (B, W, r)
         kr_all = new_cache.krope.astype(jnp.float32)      # (B, W, rd)
         q_abs = jnp.einsum("bhn,rhn->bhr", qn[:, 0].astype(jnp.float32),
@@ -399,7 +396,7 @@ def mla_mixer(cfg, p, x, positions, *, mode: str = "train", cache=None,
                   jnp.einsum("bhd,bwd->bhw", qr[:, 0].astype(jnp.float32),
                              kr_all)) * scale
         valid = jnp.minimum(pos + 1, w)
-        mask = jnp.arange(w)[None, None] < valid
+        mask = jnp.arange(w)[None, None] < valid[:, None, None]
         scores = jnp.where(mask, scores, -1e30)
         attn = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhw,bwr->bhr", attn, ckv_all)
@@ -612,12 +609,23 @@ def forward_train(cfg: ArchConfig, params, tokens, *, frames=None,
 class ServeState(NamedTuple):
     caches: Any
     cross: Any            # per-segment cross kv (whisper) or None
-    pos: jnp.ndarray      # scalar int32: next position index
+    pos: jnp.ndarray      # (B,) int32: next position index per sequence
+    #                       (vector so a continuous-batching engine can hold
+    #                       sequences at different depths — DESIGN §6)
 
 
 def forward_prefill(cfg: ArchConfig, params, tokens, *, max_len: int,
-                    frames=None, patches=None):
-    """Process the prompt, build caches; returns last-position logits."""
+                    frames=None, patches=None, length=None):
+    """Process the prompt, build caches; returns last-position logits.
+
+    length: optional (traced) scalar — number of *real* prompt tokens when
+    `tokens` is right-padded to a fixed bucket. Logits come from position
+    length-1 and pos starts at length; KV written for positions >= length
+    is garbage but sits above the decode validity mask (kv_len = pos+1)
+    and is overwritten before it ever becomes visible (DESIGN §6). Only
+    sound for full-width attention caches: windowed/SSM/recurrent state
+    folds padding in sequentially, so those archs must prefill at exact
+    length (the engine enforces this)."""
     x = _embed_tokens(cfg, params, tokens)
     enc_out = None
     if cfg.encoder_layers:
@@ -647,9 +655,15 @@ def forward_prefill(cfg: ArchConfig, params, tokens, *, max_len: int,
             x, (c, xk) = body(x, seg_p)
         caches.append(c)
         crosses.append(xk)
-    logits = _logits(cfg, params, x[:, -1:])
-    state = ServeState(caches=caches, cross=crosses,
-                       pos=jnp.asarray(x.shape[1], jnp.int32))
+    off = cfg.patch_tokens or 0
+    if length is None:
+        last = x[:, -1:]
+        next_pos = jnp.full((tokens.shape[0],), x.shape[1], jnp.int32)
+    else:
+        last = jax.lax.dynamic_slice_in_dim(x, off + length - 1, 1, axis=1)
+        next_pos = jnp.full((tokens.shape[0],), off + length, jnp.int32)
+    logits = _logits(cfg, params, last)
+    state = ServeState(caches=caches, cross=crosses, pos=next_pos)
     return logits, state
 
 
@@ -663,8 +677,8 @@ def forward_decode(cfg: ArchConfig, params, token, state: ServeState):
     x = params["embed"][token]
     if cfg.max_positions:
         x = x + params["pos_embed"][
-            jnp.minimum(state.pos, cfg.max_positions - 1)][None, None]
-    positions = state.pos[None, None]     # (1, 1) broadcasts over batch
+            jnp.minimum(state.pos, cfg.max_positions - 1)][:, None]
+    positions = state.pos[:, None]        # (B, 1): per-sequence positions
     new_caches = []
 
     for seg, seg_p, seg_c, seg_x in zip(arch_segments(cfg),

@@ -1,0 +1,256 @@
+"""Continuous-batching engine tests on the 1-device host mesh (DESIGN §6):
+slot exhaustion queues rather than drops, mixed-length requests complete
+independently via mid-decode admission, engine output matches the
+synchronous serve() path token-for-token, and the warm engine never
+recompiles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.dist import sharding as sh
+from repro.launch import serve as serve_mod
+from repro.launch import specs, steps
+from repro.launch.scheduler import Engine, SlotState, synth_request_stream
+from repro.models import transformer
+
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_config("llama3p2_3b", smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, shapes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(p,), dtype=np.int32)
+            for p in shapes]
+
+
+def _sync_ref(cfg, params, tokens, gen):
+    return np.asarray(serve_mod.serve(cfg, params,
+                                      jnp.asarray(tokens)[None],
+                                      max_len=MAX_LEN, gen=gen))[0]
+
+
+def test_full_batch_matches_sync_serve(smoke):
+    """With exactly batch-many same-shape requests the engine degenerates
+    to the synchronous path and must reproduce it token-for-token."""
+    cfg, params = smoke
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, cfg.vocab_size, size=(4, 16), dtype=np.int32)
+    ref = np.asarray(serve_mod.serve(cfg, params, jnp.asarray(prompts),
+                                     max_len=MAX_LEN, gen=8))
+    eng = Engine(cfg, params, slots=4, max_len=MAX_LEN)
+    for row in prompts:
+        eng.submit(row, max_new=8)
+    got = np.array([r.tokens for r in eng.drain()])
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_slot_exhaustion_queues_not_drops(smoke):
+    """5 requests into 2 slots: the surplus waits in the queue (visible
+    after the first step), nothing is dropped, every request completes."""
+    cfg, params = smoke
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN)
+    for toks in _prompts(cfg, [8, 8, 8, 8, 8], seed=2):
+        eng.submit(toks, max_new=6)
+    assert len(eng.queue) == 5
+    eng.step()
+    assert len(eng.queue) == 3, "only slot-many admitted, rest queued"
+    assert sum(sl.state is SlotState.DECODE for sl in eng.slots) == 2
+    results = eng.drain()
+    assert len(results) == 5 and eng.dropped == 0
+    assert all(len(r.tokens) == 6 for r in results)
+    assert eng.peak_active <= 2
+    # FIFO admission: earlier submissions never admitted after later ones
+    admits = [r.t_admit for r in results]
+    assert admits == sorted(admits)
+
+
+def test_mixed_lengths_complete_independently(smoke):
+    """Mixed prompt/gen lengths through 2 slots: every request finishes at
+    its own length and matches a single-request synchronous run, i.e.
+    mid-decode admission never corrupts a neighbouring slot."""
+    cfg, params = smoke
+    shapes = [(8, 4), (16, 12), (5, 9), (12, 3), (9, 7)]
+    prompts = _prompts(cfg, [p for p, _ in shapes], seed=3)
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN)
+    for toks, (_, gen) in zip(prompts, shapes):
+        eng.submit(toks, max_new=gen)
+    results = eng.drain()
+    assert [len(r.tokens) for r in results] == [g for _, g in shapes]
+    for toks, (_, gen), res in zip(prompts, shapes, results):
+        np.testing.assert_array_equal(np.array(res.tokens),
+                                      _sync_ref(cfg, params, toks, gen))
+
+
+def test_no_recompilation_after_warmup(smoke):
+    """After one pass over the prompt-length buckets, a heavier mixed
+    workload (N > slots, mid-decode admissions) must not trace anything
+    new — the fixed-shape compilation invariant (DESIGN §6)."""
+    cfg, params = smoke
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN)
+    for toks in _prompts(cfg, [8, 16], seed=4):    # warmup: both buckets
+        eng.submit(toks, max_new=2)
+    eng.drain()
+    warm = dict(eng.trace_counts)
+    assert warm["decode"] == 1
+
+    shapes = [(8, 5), (16, 9), (8, 3), (16, 7), (8, 11), (16, 2)]
+    for toks, (_, gen) in zip(_prompts(cfg, [p for p, _ in shapes], seed=5),
+                              shapes):
+        eng.submit(toks, max_new=gen)
+    results = eng.drain()
+    assert all(len(r.tokens) == g
+               for r, (_, g) in zip(results[2:], shapes))
+    assert dict(eng.trace_counts) == warm, \
+        f"engine recompiled after warmup: {dict(eng.trace_counts)} != {warm}"
+
+
+def test_bucketed_prefill_pads_without_divergence(smoke):
+    """pow2 bucketing: 5/7/9-token prompts share the 8/16 buckets, yet
+    greedy output still matches the exact-length synchronous path."""
+    cfg, params = smoke
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN, bucket="pow2")
+    shapes = [(5, 4), (7, 6), (9, 5), (16, 4)]
+    prompts = _prompts(cfg, [p for p, _ in shapes], seed=6)
+    for toks, (_, gen) in zip(prompts, shapes):
+        eng.submit(toks, max_new=gen)
+    results = eng.drain()
+    for toks, (_, gen), res in zip(prompts, shapes, results):
+        np.testing.assert_array_equal(np.array(res.tokens),
+                                      _sync_ref(cfg, params, toks, gen))
+    # 5 and 7 share the 8-bucket; 9 and 16 the 16-bucket
+    pre = [k for k in eng.trace_counts if k.startswith("prefill_")]
+    assert sorted(pre) == ["prefill_16", "prefill_8"]
+
+
+def test_bucketing_rejected_for_sequential_state():
+    """Padded prefill is unsound for windowed/SSM/recurrent caches —
+    construction must refuse, not silently corrupt."""
+    cfg = get_config("mamba2_2p7b", smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="full-width attention"):
+        Engine(cfg, params, slots=2, max_len=32, bucket="pow2")
+
+
+def test_slot_reuse_across_drains(smoke):
+    """A drained engine keeps its compiled programs and state buffers:
+    a second workload reuses freed slots and still matches sync serve."""
+    cfg, params = smoke
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN)
+    first = _prompts(cfg, [8, 8, 8], seed=7)
+    for toks in first:
+        eng.submit(toks, max_new=4)
+    eng.drain()
+    second = _prompts(cfg, [8, 8], seed=8)
+    rids = [eng.submit(toks, max_new=5) for toks in second]
+    results = eng.drain()
+    by_rid = {r.rid: r for r in results}
+    for toks, rid in zip(second, rids):
+        np.testing.assert_array_equal(np.array(by_rid[rid].tokens),
+                                      _sync_ref(cfg, params, toks, 5))
+
+
+def test_sampled_stream_completes(smoke):
+    """Sampled (non-greedy) decode through the engine: per-request PRNG,
+    right lengths, finite path end-to-end."""
+    cfg, params = smoke
+    stream = synth_request_stream(cfg, 5, rate=500.0, seed=9,
+                                  prompt_lens=(6, 10), gen_lens=(3, 5))
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN, greedy=False,
+                 rng=jax.random.PRNGKey(11), temperature=0.8)
+    results = eng.run(stream)
+    ordered = sorted(stream, key=lambda r: r.arrival)
+    assert [len(r.tokens) for r in results] == \
+        [r.max_new for r in ordered]
+    assert all(0 <= t < cfg.padded_vocab
+               for r in results for t in r.tokens)
+
+
+def test_request_validation(smoke):
+    cfg, params = smoke
+    eng = Engine(cfg, params, slots=2, max_len=16)
+    with pytest.raises(ValueError, match="cache rows"):
+        eng.submit(np.zeros(12, np.int32), max_new=8)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(np.zeros(4, np.int32), max_new=0)
+
+
+def test_patch_tokens_count_against_cache_budget():
+    """Vision patch tokens prepend to the decoder sequence, so they occupy
+    ring-buffer rows ahead of the prompt: a request that would fit without
+    them must be rejected, and one budgeted for them must match sync
+    serve() (regression: wrap-around silently corrupted the patch KV)."""
+    cfg = get_config("internvl2_26b", smoke=True)
+    assert cfg.patch_tokens > 0
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    plen, gen = 12, 8
+    tight = plen + gen + 1                     # fits only without patches
+    eng = Engine(cfg, params, slots=2, max_len=tight)
+    with pytest.raises(ValueError, match="cache rows"):
+        eng.submit(np.zeros(plen, np.int32), max_new=gen)
+
+    roomy = cfg.patch_tokens + plen + gen + 1
+    eng = Engine(cfg, params, slots=2, max_len=roomy)
+    toks = _prompts(cfg, [plen], seed=10)[0]
+    rng = np.random.default_rng(10)
+    patches = (rng.standard_normal(
+        (cfg.patch_tokens, cfg.d_model)) * 0.02).astype(np.float32)
+    eng.submit(toks, max_new=gen, patches=patches)
+    res = eng.drain()[0]
+    ref = np.asarray(serve_mod.serve(
+        cfg, params, jnp.asarray(toks)[None], max_len=roomy, gen=gen,
+        patches=jnp.asarray(patches)[None]))[0]
+    np.testing.assert_array_equal(np.array(res.tokens), ref)
+
+
+def test_engine_specs_resolve_on_production_mesh(smoke):
+    """The engine's fixed-shape inputs resolve to valid shardings on the
+    multi-pod production mesh layout (abstract stand-in, no devices)."""
+    cfg, _ = smoke
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+
+        class devices:
+            shape = (2, 16, 16)
+
+    inspecs = specs.engine_input_specs(cfg, 16, 32)
+    assert set(inspecs) >= {"tokens", "length", "slot", "token", "active"}
+    resolved = {k: sh.SERVE_RULES.resolve(specs.ENGINE_INPUT_LOGICAL[k],
+                                          FakeMesh(), shape=v.shape)
+                for k, v in inspecs.items()}
+    assert resolved["length"] == jax.sharding.PartitionSpec()
+    # slots=32 divides pod*data=32: the decode feed shards over the batch
+    assert resolved["token"][0] == ("pod", "data")
+    # the batch-1 prefill request never shards
+    assert resolved["tokens"] == jax.sharding.PartitionSpec(None, None)
+    # the NamedSharding wrapper resolves on a real (host) mesh too
+    from repro.launch.mesh import make_host_mesh
+    host = specs.engine_input_shardings(
+        cfg, 16, 4, make_host_mesh(), sh.SERVE_RULES)
+    assert set(host) == set(inspecs)
+
+
+def test_serve_state_zeros_matches_prefill_structure(smoke):
+    """The engine's zero-initialised state must be tree/shape/dtype
+    compatible with what a real batched prefill produces — otherwise the
+    first write_state_slot would silently broadcast or fail."""
+    cfg, params = smoke
+    zeros = steps.serve_state_zeros(cfg, params, 3, MAX_LEN)
+    tokens = jnp.zeros((3, 8), jnp.int32)
+    _, real = transformer.forward_prefill(cfg, params, tokens,
+                                          max_len=MAX_LEN)
+    z_leaves = jax.tree.leaves(zeros)
+    r_leaves = jax.tree.leaves(real)
+    assert jax.tree.structure(zeros) == jax.tree.structure(real)
+    assert [(l.shape, l.dtype) for l in z_leaves] == \
+        [(l.shape, l.dtype) for l in r_leaves]
