@@ -1,36 +1,84 @@
-"""E8 — kernel microbenchmarks (ours; no paper table).
+"""E8 — WNN kernel benchmarks at the paper geometries (ULN-S/M/L).
 
-CPU wall-times compare the jnp oracle to the interpret-mode kernel only
-for correctness-path costs; the structural numbers that matter for the
-TPU target (VMEM working set per block, MXU-aligned dims, arithmetic
-intensity) are derived analytically per kernel and reported alongside.
+Sweeps every submodel shape of the model zoo (`benchmarks/model_zoo.py`
+ZOO, the paper's Table I scaled to the 256-px synthetic task) through the
+backend-dispatched inference pipeline (`repro.kernels.ops.wnn_scores`),
+timing the fused Pallas formulation against the gather formulation and
+emitting machine-readable rows to BENCH_kernel.json.
+
+On TPU both backends are compiled and the fused/gather ratio is the
+adoption argument; on CPU the gather timing is the real serving number
+and the fused kernel runs in interpret mode (bit-exact kernel-body
+execution — a correctness cost, not a TPU projection), so each row
+carries its execution `mode`. Structural numbers for the TPU target
+(VMEM per block, arithmetic intensity) are derived analytically.
+
+    python benchmarks/kernel_bench.py                  # full sweep
+    python benchmarks/kernel_bench.py --smoke          # one geometry (CI)
+    python benchmarks/kernel_bench.py --check BENCH_kernel.json
 """
 from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import zlib
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
-from repro.kernels import ref
-from repro.kernels.fused_wnn import fused_wnn
-from repro.kernels.h3_hash import h3_hash_tiled
+from benchmarks.model_zoo import ZOO
+from repro.kernels import ops, ref
+
+SCHEMA = "kernel_bench/v1"
+ROW_KEYS = ("model", "submodel", "backend", "mode", "b", "n_f", "n", "m",
+            "entries", "k", "wall_us")
+FEATURES = 256               # benchmark task: 16x16 synthetic MNIST-like
 
 
-def main() -> None:
-    key = jax.random.PRNGKey(0)
+def zoo_geometries():
+    """Yields (model, submodel_idx, n_f, n, entries) for every ZOO submodel;
+    batch/classes/hashes are `bench_geometry` defaults."""
+    for name, (bits, subs, _prune) in ZOO.items():
+        total_bits = FEATURES * bits
+        for i, (n, log2e) in enumerate(subs):
+            yield (name, i, math.ceil(total_bits / n), n, 2 ** log2e)
+
+
+def bench_geometry(model: str, sm_idx: int, n_f: int, n: int, e: int, *,
+                   b: int = 256, m: int = 10, k: int = 2) -> list[dict]:
+    key = jax.random.PRNGKey(zlib.crc32(f"{model}.{sm_idx}".encode()))
     ks = jax.random.split(key, 4)
-    b, n_f, n, m, e, k = 256, 131, 12, 10, 64, 2   # ULN-S SM0-like
     tuples = jax.random.bernoulli(ks[0], 0.5, (b, n_f, n)).astype(jnp.int8)
     params = jax.random.randint(ks[1], (k, n), 0, e, dtype=jnp.int32)
     table = jax.random.bernoulli(ks[2], 0.3, (m, n_f, e)).astype(jnp.int8)
-    mask = jnp.ones((m, n_f), jnp.int8)
+    mask = jax.random.bernoulli(ks[3], 0.8, (m, n_f)).astype(jnp.int8)
     bias = jnp.zeros((m,), jnp.int32)
 
-    jit_ref = jax.jit(ref.fused_wnn_ref)
-    us = timeit(jit_ref, tuples, params, table, mask, bias, iters=10)
-    emit("kernel.fused_wnn.oracle_us", f"{us:.0f}", f"B={b} Nf={n_f}")
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    for backend in ("fused", "gather"):
+        fn = lambda *a: ops.wnn_scores(*a, backend=backend)
+        us = timeit(fn, tuples, params, table, mask, bias, iters=5, warmup=1)
+        mode = ("tpu" if on_tpu else
+                "interpret" if backend == "fused" else f"xla-cpu")
+        rows.append(dict(model=model, submodel=sm_idx, backend=backend,
+                         mode=mode, b=b, n_f=n_f, n=n, m=m, entries=e, k=k,
+                         wall_us=round(us, 1)))
+        emit(f"kernel.wnn.{model}.sm{sm_idx}.{backend}_us", f"{us:.0f}",
+             f"Nf={n_f} n={n} E={e} mode={mode}")
+    fused, gather = rows[0]["wall_us"], rows[1]["wall_us"]
+    emit(f"kernel.wnn.{model}.sm{sm_idx}.fused_over_gather",
+         f"{fused / max(gather, 1e-9):.2f}",
+         "ratio < 1 means fused wins (TPU target; interpret mode on CPU)")
+    return rows
 
-    # fused kernel structural numbers for the TPU target
+
+def structural_report() -> None:
+    """Analytical TPU-target numbers for the fused kernel (no hardware)."""
+    b, n_f, n, m, e, k = 256, 131, 12, 10, 64, 2   # ULN-S SM0-like
     block_b, block_f = 128, 64
     vmem = (block_b * block_f * n            # tuples int8
             + m * block_f * e                # table int8
@@ -39,32 +87,86 @@ def main() -> None:
     flops = 2 * block_b * m * block_f * e * k     # one-hot matmuls
     emit("kernel.fused_wnn.vmem_kib_per_block", f"{vmem / 1024:.0f}",
          f"block=({block_b},{block_f}) fits 16MiB VMEM: {vmem < 16 * 2**20}")
-    emit("kernel.fused_wnn.arith_intensity",
-         f"{flops / max(1, vmem):.1f}",
+    emit("kernel.fused_wnn.arith_intensity", f"{flops / max(1, vmem):.1f}",
          "flops per VMEM byte; MXU-aligned dims (E=64, M pad 128)")
 
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 2)
+    tuples = jax.random.bernoulli(ks[0], 0.5, (b, n_f, n)).astype(jnp.int8)
+    params = jax.random.randint(ks[1], (k, n), 0, e, dtype=jnp.int32)
     jit_h3 = jax.jit(ref.h3_hash_ref)
     us = timeit(jit_h3, tuples, params, iters=10)
     emit("kernel.h3.oracle_us", f"{us:.0f}", f"{b * n_f * k} hashes")
     emit("kernel.h3.hashes_per_us", f"{b * n_f * k / max(us, 1e-9):.0f}",
          "CPU oracle rate")
 
-    # flash attention: oracle vs chunked-XLA (the TPU kernel's CPU stand-in)
-    from repro.models.layers import chunked_attention
-    q = jax.random.normal(ks[0], (1, 8, 512, 64))
-    kk = jax.random.normal(ks[1], (1, 8, 512, 64))
-    v = jax.random.normal(ks[2], (1, 8, 512, 64))
-    naive = jax.jit(lambda q, k, v: ref.attention_ref(
-        q.reshape(8, 512, 64), k.reshape(8, 512, 64),
-        v.reshape(8, 512, 64), causal=True))
-    us_naive = timeit(naive, q, kk, v, iters=5)
-    chunked = jax.jit(lambda q, k, v: chunked_attention(
-        q, k, v, causal=True, chunk=128))
-    us_chunk = timeit(chunked, q, kk, v, iters=5)
-    emit("kernel.attention.naive_us", f"{us_naive:.0f}", "S=512 full S^2")
-    emit("kernel.attention.chunked_us", f"{us_chunk:.0f}",
-         f"streaming-softmax; ratio {us_chunk / us_naive:.2f}")
+
+def check(path: str) -> int:
+    """Validate a BENCH_kernel.json: schema, row keys, fused/gather pairing.
+
+    Returns 0 when well-formed; prints the defect and returns 1 otherwise.
+    The CI benchmark-smoke step runs this after the --smoke sweep.
+    """
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"[check] {path}: unreadable/malformed: {exc}")
+        return 1
+    if doc.get("schema") != SCHEMA:
+        print(f"[check] {path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+        return 1
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        print(f"[check] {path}: no rows")
+        return 1
+    backends_seen: dict[tuple, set] = {}
+    for i, row in enumerate(rows):
+        missing = [kk for kk in ROW_KEYS if kk not in row]
+        if missing:
+            print(f"[check] {path}: row {i} missing keys {missing}")
+            return 1
+        if not (isinstance(row["wall_us"], (int, float))
+                and row["wall_us"] > 0):
+            print(f"[check] {path}: row {i} wall_us={row['wall_us']!r}")
+            return 1
+        backends_seen.setdefault((row["model"], row["submodel"]),
+                                 set()).add(row["backend"])
+    unpaired = {g for g, bs in backends_seen.items()
+                if not {"fused", "gather"} <= bs}
+    if unpaired:
+        print(f"[check] {path}: geometries missing a fused/gather pair: "
+              f"{sorted(unpaired)}")
+        return 1
+    print(f"[check] {path}: ok ({len(rows)} rows, "
+          f"{len(backends_seen)} geometries)")
+    return 0
+
+
+def main(smoke: bool = False, out: str = "BENCH_kernel.json") -> None:
+    rows = []
+    geoms = list(zoo_geometries())
+    if smoke:
+        geoms = geoms[:1]                       # ULN-S SM0: CI smoke
+    for model, sm_idx, n_f, n, e in geoms:
+        rows.extend(bench_geometry(model, sm_idx, n_f, n, e,
+                                   b=64 if smoke else 256))
+    structural_report()
+    with open(out, "w") as f:
+        json.dump({"schema": SCHEMA,
+                   "backend": jax.default_backend(),
+                   "rows": rows}, f, indent=1)
+    emit("kernel.wnn.bench_rows", str(len(rows)), f"written to {out}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one geometry only (CI benchmark-smoke step)")
+    ap.add_argument("--out", default="BENCH_kernel.json")
+    ap.add_argument("--check", metavar="PATH",
+                    help="validate an existing BENCH_kernel.json and exit")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check(args.check))
+    main(smoke=args.smoke, out=args.out)

@@ -3,14 +3,17 @@
 1. Train the ULN-S-like ensemble (multi-shot) on synthetic MNIST.
 2. Prune 30%, binarize, export the bit-packed artifact (what the paper's
    RTL generator consumes).
-3. Serve a batch through the fused Pallas inference kernel — the whole
-   accelerator (hash -> lookup -> AND -> popcount -> bias -> argmax) as
-   one kernel, validated in interpret mode on CPU.
+3. Serve a batch through the backend-dispatched WNN pipeline
+   (`export.artifact_scores`): --backend fused runs the whole accelerator
+   (hash -> lookup -> AND -> popcount -> bias -> argmax) as ONE Pallas
+   kernel per submodel (interpret mode on CPU); --backend gather is the
+   take_along_axis formulation; auto picks per platform (DESIGN §2).
 4. Report the analytical FPGA/ASIC cost next to the paper's FINN /
    Bit Fusion comparison points.
 
-    PYTHONPATH=src python examples/uleen_edge_pipeline.py
+    PYTHONPATH=src python examples/uleen_edge_pipeline.py --backend fused
 """
+import argparse
 import time
 
 import jax
@@ -23,10 +26,9 @@ from repro.core.model import SubmodelSpec, UleenSpec, init_params, init_static
 from repro.core.multi_shot import MultiShotConfig, train_multi_shot
 from repro.core.pruning import prune_and_finetune
 from repro.data.synth import make_mnist_like
-from repro.kernels import ops
 
 
-def main():
+def main(backend: str = "auto"):
     key = jax.random.PRNGKey(0)
     ds = make_mnist_like(key, n_train=4000, n_test=1000, hw=16)
     enc = fit_gaussian_thermometer(ds.x_train, 2)
@@ -51,23 +53,16 @@ def main():
           f"{art.hash_ops_per_inference} hash ops + "
           f"{art.lookups_per_inference} lookups / inference")
 
-    # --- serve through the fused accelerator kernel (interpret mode) ---
+    # --- serve through the backend-dispatched WNN pipeline ---
     batch = bits_te[:256]
     t0 = time.time()
-    scores = jnp.zeros((batch.shape[0], art.num_classes), jnp.int32)
-    for sm in art.submodels:
-        tuples = batch[:, jnp.asarray(sm.perm)].astype(jnp.int8)
-        table = jnp.asarray(export.unpack_table(sm.packed, sm.entries)
-                            ).astype(jnp.int8)
-        scores = scores + ops.wnn_infer(
-            tuples, jnp.asarray(sm.h3).astype(jnp.int32), table,
-            jnp.asarray(sm.mask).astype(jnp.int8),
-            jnp.zeros((art.num_classes,), jnp.int32), use_kernel=True)
-    scores = scores + jnp.asarray(art.bias)[None]
+    scores = export.artifact_scores(art, batch, backend=backend)
     pred = jnp.argmax(scores, -1)
     acc = float(jnp.mean(pred == ds.y_test[:256]))
-    print(f"fused-kernel serving: {acc:.1%} on 256 requests "
-          f"({time.time() - t0:.1f}s interpret mode)")
+    mode = ("interpret" if backend == "fused"
+            and jax.default_backend() != "tpu" else jax.default_backend())
+    print(f"{backend}-backend serving: {acc:.1%} on 256 requests "
+          f"({time.time() - t0:.1f}s, {mode})")
 
     # --- edge hardware report ---
     counts = hwmodel.counts_from_artifact(art)
@@ -84,4 +79,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=["fused", "gather", "auto"],
+                    default="auto", help="WNN inference backend (DESIGN §2)")
+    main(backend=ap.parse_args().backend)

@@ -1,0 +1,79 @@
+"""Regenerate the fused-adoption golden fixtures in tests/golden/.
+
+Trains a small ULN-S ensemble (multi-shot STE + 30% prune) on the synthetic
+MNIST-like task, binarizes and exports it, and freezes:
+
+* ``uln_s_artifact.npz``  — the deployable artifact (export.save format)
+* ``uln_s_golden.npz``    — 64 encoded test inputs (``bits``, uint8) and
+  their int32 ensemble scores through the gather path (``scores``), plus
+  the test labels for an accuracy sanity bound.
+
+tests/test_fused_adoption.py asserts the fused kernel, the gather path, and
+the exported bitstream all reproduce ``scores`` exactly — so future kernel
+or export edits cannot silently drift. Run this ONLY when the model or
+export format intentionally changes:
+
+    PYTHONPATH=src python scripts/make_golden.py
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import export
+from repro.core.encoding import fit_gaussian_thermometer
+from repro.core.model import (SubmodelSpec, UleenSpec, binarize_params,
+                              compute_hashes, forward_binary, init_params,
+                              init_static)
+from repro.core.multi_shot import MultiShotConfig, train_multi_shot
+from repro.core.pruning import prune_and_finetune
+from repro.data.synth import make_mnist_like
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+
+def main() -> None:
+    ds = make_mnist_like(jax.random.PRNGKey(7), n_train=1500, n_test=200,
+                         hw=16)
+    enc = fit_gaussian_thermometer(ds.x_train, 2)
+    bits_tr, bits_te = enc.encode(ds.x_train), enc.encode(ds.x_test)
+
+    # ULN-S geometry (benchmarks/model_zoo.py ZOO) at the 256-px task
+    spec = UleenSpec(num_classes=10, total_bits=bits_tr.shape[1],
+                     submodels=(SubmodelSpec(12, 6), SubmodelSpec(16, 6),
+                                SubmodelSpec(20, 6)), bits_per_input=2)
+    statics = init_static(jax.random.PRNGKey(1), spec)
+    params = init_params(jax.random.PRNGKey(2), spec, init_scale=0.1)
+    res = train_multi_shot(spec, statics, params, bits_tr, ds.y_train,
+                           bits_te, ds.y_test,
+                           MultiShotConfig(epochs=8, batch_size=128,
+                                           learning_rate=1e-2))
+    res = prune_and_finetune(spec, statics, res.params, bits_tr, ds.y_train,
+                             bits_te, ds.y_test, ratio=0.3,
+                             finetune=MultiShotConfig(epochs=2,
+                                                      batch_size=128,
+                                                      learning_rate=5e-3))
+
+    art = export.export_model(spec, statics, res.params)
+    bits = bits_te[:64]
+    tables_bin, masks, bias = binarize_params(res.params)
+    scores = forward_binary(spec, tables_bin, masks, bias,
+                            compute_hashes(spec, statics, bits))
+    acc = float(jnp.mean(jnp.argmax(scores, -1) == ds.y_test[:64]))
+
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    export.save(art, os.path.join(GOLDEN_DIR, "uln_s_artifact.npz"))
+    np.savez_compressed(
+        os.path.join(GOLDEN_DIR, "uln_s_golden.npz"),
+        bits=np.asarray(bits, np.uint8),
+        scores=np.asarray(scores, np.int32),
+        labels=np.asarray(ds.y_test[:64], np.int32))
+    print(f"golden fixtures written to {os.path.abspath(GOLDEN_DIR)} "
+          f"(val acc on the 64 frozen inputs: {acc:.1%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,8 +4,8 @@ from repro.core.encoding import (ThermometerEncoder, fit_gaussian_thermometer,
 from repro.core.hashing import h3_hash, make_h3_params, murmur_double_hash
 from repro.core.model import (SubmodelSpec, SubmodelStatic, UleenParams,
                               UleenSpec, binarize_params, compute_hashes,
-                              forward, forward_binary, init_params,
-                              init_static, predict)
+                              forward, forward_binary, forward_binary_fused,
+                              init_params, init_static, predict)
 from repro.core.multi_shot import (MultiShotConfig, evaluate, make_eval_fn,
                                    make_train_step, train_multi_shot)
 from repro.core.one_shot import (OneShotModel, binarize, evaluate_one_shot,

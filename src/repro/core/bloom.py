@@ -29,6 +29,26 @@ def gather_filter_values(table: jnp.ndarray, hashes: jnp.ndarray) -> jnp.ndarray
     return jax.vmap(one)(hashes)
 
 
+def apply_mask(resp: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Apply a pruning mask to filter responses. THE canonical definition.
+
+    resp: (B, M, N_f) responses; mask: (M, N_f) survival mask ->
+    masked responses, same dtype as `resp`.
+
+    Semantics (DESIGN §2 "Adoption"): a filter survives iff its mask entry
+    is **nonzero**; the mask's magnitude never scales the response. Masks
+    are structural metadata ({0,1} by construction in `core/pruning.py`),
+    but every consumer — the gather paths here, `ref.fused_wnn_ref`, and
+    the Pallas `fused_wnn_kernel` — binarises through `!= 0` so a mask
+    that arrives as float weights, int counts, or values > 1 cannot make
+    the fused and gather formulations disagree.
+    """
+    keep = mask != 0
+    if resp.dtype == jnp.bool_:
+        return resp & keep[None]
+    return resp * keep[None].astype(resp.dtype)
+
+
 def ste_step(x: jnp.ndarray) -> jnp.ndarray:
     """Unit step with straight-through gradient (f'(x) := 1)."""
     return x + jax.lax.stop_gradient(jnp.where(x >= 0, 1.0, 0.0) - x)

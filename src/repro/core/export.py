@@ -91,6 +91,34 @@ def export_model(spec: UleenSpec, statics: Sequence[SubmodelStatic],
                              bits_per_input=spec.bits_per_input)
 
 
+def artifact_scores(artifact: InferenceArtifact, bits: jnp.ndarray, *,
+                    backend: str = "auto") -> jnp.ndarray:
+    """Serve encoded inputs straight from the deployable artifact.
+
+    bits: (B, total_bits) bool/int {0,1} -> scores (B, M) int32, through the
+    backend-dispatched WNN pipeline (`kernels.ops.wnn_scores`): unpack each
+    submodel's bit-packed table, slice its tuples via the stored input
+    permutation, and run hash -> lookup -> AND -> popcount once per
+    submodel; backend="fused" is the paper's whole accelerator as one
+    Pallas kernel per submodel (DESIGN §2 "Adoption").
+
+    Bit-identical to `model.forward_binary` on the pre-export params —
+    the golden fixtures in tests/test_fused_adoption.py pin all three.
+    """
+    from repro.kernels import ops  # late import: export is also numpy-only IO
+    bits = jnp.asarray(bits)
+    scores = jnp.zeros((bits.shape[0], artifact.num_classes), jnp.int32)
+    for sm in artifact.submodels:
+        tuples = bits[:, jnp.asarray(sm.perm)].astype(jnp.int8)
+        table = jnp.asarray(unpack_table(sm.packed, sm.entries)
+                            ).astype(jnp.int8)
+        scores = scores + ops.wnn_scores(
+            tuples, jnp.asarray(sm.h3).astype(jnp.int32), table,
+            jnp.asarray(sm.mask).astype(jnp.int8),
+            jnp.zeros((artifact.num_classes,), jnp.int32), backend=backend)
+    return scores + jnp.asarray(artifact.bias)[None]
+
+
 def save(artifact: InferenceArtifact, path: str) -> None:
     arrs = {"bias": artifact.bias,
             "meta": np.array([artifact.num_classes, artifact.total_bits,

@@ -164,8 +164,9 @@ def forward(spec: UleenSpec, params: UleenParams,
         if spec.bf16_tables:
             table = table.astype(jnp.bfloat16)
         resp = bloom.continuous_filter_response(table, hashes[i])  # (B, M, N_f)
-        # Masks are structural (pruning), never trained: block their gradient.
-        resp = resp * jax.lax.stop_gradient(mask)[None]
+        # Masks are structural (pruning), never trained — apply_mask's
+        # nonzero-keep test carries no gradient path to the mask.
+        resp = bloom.apply_mask(resp, mask)
         if train and spec.dropout > 0.0:
             assert rng is not None, "train=True requires a dropout rng"
             rng, sub = jax.random.split(rng)
@@ -182,13 +183,50 @@ def forward(spec: UleenSpec, params: UleenParams,
 def forward_binary(spec: UleenSpec, tables_bin: Sequence[jnp.ndarray],
                    masks: Sequence[jnp.ndarray], bias: jnp.ndarray,
                    hashes: Sequence[jnp.ndarray]) -> jnp.ndarray:
-    """Deployment inference: binary tables, AND-reduce, popcount, bias."""
+    """Deployment inference: binary tables, AND-reduce, popcount, bias.
+
+    The gather formulation — precomputed hashes indexing the tables via
+    `take_along_axis`. This is the autodiff-shaped reference the fused
+    Pallas path (`forward_binary_fused`) must stay bit-identical to.
+    """
     b = hashes[0].shape[0]
     scores = jnp.zeros((b, len(bias)), jnp.int32)
     for i, table in enumerate(tables_bin):
         resp = bloom.binary_filter_response(table, hashes[i])
-        resp = resp & (masks[i][None] > 0)
+        resp = bloom.apply_mask(resp, masks[i])
         scores = scores + jnp.sum(resp, axis=-1, dtype=jnp.int32)
+    return scores + jnp.round(bias).astype(jnp.int32)[None, :]
+
+
+def forward_binary_fused(spec: UleenSpec, statics: Sequence[SubmodelStatic],
+                         tables_bin: Sequence[jnp.ndarray],
+                         masks: Sequence[jnp.ndarray], bias: jnp.ndarray,
+                         bits: jnp.ndarray, *,
+                         backend: str = "auto") -> jnp.ndarray:
+    """Deployment inference straight from encoded input bits (B, total_bits).
+
+    One `kernels.ops.wnn_scores` dispatch per submodel on the raw
+    thermometer tuples — subsuming `compute_hashes` +
+    `bloom.binary_filter_response` + mask/bias application. With
+    `backend="fused"` each submodel is ONE Pallas kernel launch
+    (hash → one-hot MXU lookup → AND → popcount), the paper's whole
+    accelerator pipeline; `"gather"` runs the jnp oracle on the same
+    tuples and is bit-identical; `"auto"` picks per platform
+    (DESIGN §2 "Adoption").
+
+    Only the H3 hash family is fused (the paper's central hash block).
+    Models hashed with `murmur`/`identity` must go through
+    `compute_hashes` + `forward_binary`.
+    """
+    from repro.kernels import ops  # late import: core must not import pallas
+    b = bits.shape[0]
+    scores = jnp.zeros((b, len(bias)), jnp.int32)
+    for st, table, mask in zip(statics, tables_bin, masks):
+        tuples = bits[:, st.perm].astype(jnp.int8)          # (B, N_f, n)
+        scores = scores + ops.wnn_scores(
+            tuples, st.h3.astype(jnp.int32), table.astype(jnp.int8),
+            (mask != 0).astype(jnp.int8),
+            jnp.zeros((len(bias),), jnp.int32), backend=backend)
     return scores + jnp.round(bias).astype(jnp.int32)[None, :]
 
 

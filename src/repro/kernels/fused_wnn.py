@@ -40,7 +40,9 @@ def fused_wnn_kernel(tuples_ref, params_ref, table_ref, mask_ref, bias_ref,
     f_idx = pl.program_id(1)
     bits = tuples_ref[...].astype(jnp.int32)          # (Bt, Ft, n)
     table = table_ref[...].astype(jnp.int8)           # (M, Ft, E)
-    mask = mask_ref[...].astype(jnp.int32)            # (M, Ft)
+    # Canonical mask semantics (core/bloom.py::apply_mask): survive iff
+    # nonzero — magnitude never scales the response.
+    mask = (mask_ref[...] != 0).astype(jnp.int32)     # (M, Ft)
     bt, ft, _ = bits.shape
     m = table.shape[0]
 

@@ -23,13 +23,98 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
-def wnn_infer(tuples, params, table, mask, bias, *, use_kernel: bool = False):
-    """Fused WNN inference scores (B, M) int32 (one submodel)."""
-    if use_kernel or _on_tpu():
+# ---------------------------------------------------------------------------
+# WNN inference backend dispatch (DESIGN §2 "Adoption")
+# ---------------------------------------------------------------------------
+
+WNN_BACKENDS = ("fused", "gather", "auto")
+
+# The fused kernel unrolls the H3 XOR-select over n and the k hash lookups in
+# the kernel body; these bound the unroll so a bad spec fails loudly at trace
+# time instead of producing an enormous Mosaic program.
+_MAX_TUPLE_BITS = 64
+_MAX_HASHES = 8
+
+
+def resolve_wnn_backend(backend: str = "auto") -> str:
+    """'auto' -> 'fused' on TPU (the MXU formulation), 'gather' elsewhere
+    (plain-XLA gathers beat an interpret-mode kernel on CPU)."""
+    if backend not in WNN_BACKENDS:
+        raise ValueError(
+            f"backend must be one of {WNN_BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        return "fused" if _on_tpu() else "gather"
+    return backend
+
+
+def validate_wnn_geometry(tuples, params, table, mask, bias) -> None:
+    """Shape/tile validation shared by every backend.
+
+    Raises ValueError at trace time for geometry the fused kernel cannot
+    honour bit-exactly — most importantly non-power-of-two `entries`: H3
+    XOR-composes parameter words in [0, E), which stays in-range only when
+    E is a power of two; out-of-range hashes would one-hot to zero in the
+    fused kernel but clip in the gather's `take_along_axis`.
+    """
+    if tuples.ndim != 3:
+        raise ValueError(f"tuples must be (B, N_f, n), got {tuples.shape}")
+    if params.ndim != 2 or table.ndim != 3 or mask.ndim != 2 or bias.ndim != 1:
+        raise ValueError(
+            "expected params (k, n), table (M, N_f, E), mask (M, N_f), "
+            f"bias (M,); got {params.shape}, {table.shape}, {mask.shape}, "
+            f"{bias.shape}")
+    _, n_f, n = tuples.shape
+    k, n_p = params.shape
+    m, n_f_t, entries = table.shape
+    if n_p != n:
+        raise ValueError(f"params n={n_p} != tuples n={n}")
+    if n_f_t != n_f:
+        raise ValueError(f"table N_f={n_f_t} != tuples N_f={n_f}")
+    if mask.shape != (m, n_f):
+        raise ValueError(f"mask {mask.shape} != (M, N_f)=({m}, {n_f})")
+    if bias.shape != (m,):
+        raise ValueError(f"bias {bias.shape} != (M,)=({m},)")
+    if entries & (entries - 1) or entries == 0:
+        raise ValueError(
+            f"entries={entries} must be a power of two (H3 range closure)")
+    if n > _MAX_TUPLE_BITS:
+        raise ValueError(f"n={n} exceeds the kernel unroll bound "
+                         f"{_MAX_TUPLE_BITS}")
+    if not 1 <= k <= _MAX_HASHES:
+        raise ValueError(f"k={k} outside [1, {_MAX_HASHES}]")
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def wnn_scores(tuples, params, table, mask, bias, *, backend: str = "auto"):
+    """One submodel's inference scores (B, M) int32, backend-dispatched.
+
+    tuples: (B, N_f, n) int8 {0,1}; params: (k, n) int32; table: (M, N_f, E)
+    int8 {0,1}; mask: (M, N_f) int8; bias: (M,) int32.
+
+    backend="fused"  — the Pallas kernel (interpret mode off-TPU, so the
+                       exact TPU kernel body runs bit-for-bit on CPU);
+    backend="gather" — the jnp take_along_axis oracle (`ref.fused_wnn_ref`);
+    backend="auto"   — fused on TPU, gather elsewhere.
+
+    Both backends are exactly score-equal by contract
+    (tests/test_fused_adoption.py enforces int32 equality).
+    """
+    validate_wnn_geometry(tuples, params, table, mask, bias)
+    if resolve_wnn_backend(backend) == "fused":
         return fused_wnn(tuples, params, table, mask, bias,
                          interpret=not _on_tpu())
     return ref.fused_wnn_ref(tuples, params, table, mask, bias)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def wnn_infer(tuples, params, table, mask, bias, *, use_kernel: bool = False):
+    """Fused WNN inference scores (B, M) int32 (one submodel).
+
+    Legacy wrapper over `wnn_scores`: use_kernel=True forces the fused
+    backend; otherwise the platform default ("auto") applies.
+    """
+    return wnn_scores(tuples, params, table, mask, bias,
+                      backend="fused" if use_kernel else "auto")
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))

@@ -23,7 +23,8 @@ def fused_wnn_ref(tuples: jnp.ndarray, params: jnp.ndarray,
 
     vals = jax.vmap(one)(hashes)                               # (B, M, N_f, k)
     resp = jnp.min(vals, axis=-1)                              # AND for {0,1}
-    resp = resp * mask.astype(jnp.int32)[None]
+    # survive iff nonzero (core/bloom.py::apply_mask semantics)
+    resp = resp * (mask != 0).astype(jnp.int32)[None]
     return jnp.sum(resp, axis=-1) + bias.astype(jnp.int32)[None, :]
 
 

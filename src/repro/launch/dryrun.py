@@ -124,14 +124,40 @@ def lower_cell(cfg, shape, mesh, *, extra_flags: dict | None = None):
     return record, compiled
 
 
-def run_uleen_cell(multi_pod: bool, out_dir: str | None) -> dict:
-    """Bonus cell: the paper's own training step on the production mesh."""
+def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
+                   shape: str = "train_mnist_scale",
+                   backend: str = "auto") -> dict:
+    """Bonus cells: the paper's own train/infer steps on the production mesh.
+
+    shape="train_mnist_scale" lowers the multi-shot STE training step;
+    shape="infer_mnist_scale" lowers the deployed binary-inference step with
+    the WNN kernel `backend` flag threaded through (DESIGN §2 "Adoption").
+    """
     from repro.launch import uleen_cell
+    if shape not in ("train_mnist_scale", "infer_mnist_scale"):
+        raise ValueError(f"uleen cells lower only train_mnist_scale / "
+                         f"infer_mnist_scale, got {shape!r}")
     mesh = make_production_mesh(multi_pod=multi_pod)
-    tag = f"uleen_uln_l.train_mnist_scale.{'pod2' if multi_pod else 'pod1'}"
+    infer = shape == "infer_mnist_scale"
+    tag = f"uleen_uln_l.{shape}.{'pod2' if multi_pod else 'pod1'}"
+    if infer:
+        tag += f".{backend}"
+    # What the fused flag actually lowers on this process's devices: the
+    # Mosaic kernel on TPU, its interpret-mode (lax-level) emulation on the
+    # placeholder CPU mesh — the record must say which, like BENCH_kernel
+    # rows do, so fused-vs-gather comparisons aren't read off emulation.
+    from repro.kernels import ops as wnn_ops
+    resolved = wnn_ops.resolve_wnn_backend(backend)
+    on_tpu = jax.default_backend() == "tpu"
+    kernel_mode = ("mosaic" if resolved == "fused" and on_tpu else
+                   "interpret" if resolved == "fused" else "xla")
     try:
         t0 = time.time()
-        compiled = uleen_cell.lower_uleen_cell(mesh)
+        if infer:
+            compiled = uleen_cell.lower_uleen_infer_cell(mesh,
+                                                         backend=backend)
+        else:
+            compiled = uleen_cell.lower_uleen_cell(mesh)
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
@@ -142,12 +168,16 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None) -> dict:
             spec.num_filters(sm) * sm.num_hashes *
             (sm.inputs_per_filter + 1) + spec.num_filters(sm)
             for sm in spec.submodels) * spec.num_classes
-        mflops = float(ops_per_inf * uleen_cell.GLOBAL_BATCH)
+        batch = uleen_cell.INFER_BATCH if infer else uleen_cell.GLOBAL_BATCH
+        mflops = float(ops_per_inf * batch)
         roof = hlo_cost.roofline_from(compiled.as_text(), cost,
                                       mesh.devices.size, mflops)
         record = {
-            "arch": "uleen-uln-l", "shape": "train_mnist_scale",
-            "kind": "train",
+            "arch": "uleen-uln-l", "shape": shape,
+            "kind": "infer" if infer else "train",
+            "backend": backend if infer else None,
+            "backend_resolved": resolved if infer else None,
+            "kernel_mode": kernel_mode if infer else None,
             "mesh": "x".join(str(d) for d in mesh.devices.shape),
             "chips": mesh.devices.size, "ok": True,
             "lower_s": 0.0, "compile_s": round(t_compile, 2),
@@ -170,7 +200,11 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None) -> dict:
               f"{roofs['memory_s']:.3e}/{roofs['collective_s']:.3e} "
               f"dominant={roofs['dominant']}")
     except Exception as e:
-        record = {"arch": "uleen-uln-l", "shape": "train_mnist_scale",
+        record = {"arch": "uleen-uln-l", "shape": shape,
+                  "kind": "infer" if infer else "train",
+                  "backend": backend if infer else None,
+                  "backend_resolved": resolved if infer else None,
+                  "kernel_mode": kernel_mode if infer else None,
                   "mesh": "pod2" if multi_pod else "pod1", "ok": False,
                   "error": f"{type(e).__name__}: {e}",
                   "traceback": traceback.format_exc()[-4000:]}
@@ -183,9 +217,10 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             out_dir: str | None) -> dict:
+             out_dir: str | None, *, backend: str = "auto") -> dict:
     if arch == "uleen":
-        return run_uleen_cell(multi_pod, out_dir)
+        return run_uleen_cell(multi_pod, out_dir, shape=shape_name,
+                              backend=backend)
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -215,7 +250,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=ARCH_IDS + ["uleen"])
-    ap.add_argument("--shape", choices=list(SHAPES) + ["train_mnist_scale"])
+    ap.add_argument("--shape", choices=(list(SHAPES) + ["train_mnist_scale",
+                                                        "infer_mnist_scale"]))
+    ap.add_argument("--backend", choices=["fused", "gather", "auto"],
+                    default="auto",
+                    help="WNN kernel backend for the uleen infer cell")
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
     ap.add_argument("--all", action="store_true",
@@ -231,6 +270,10 @@ def main(argv=None) -> int:
     else:
         if not (args.arch and args.shape):
             ap.error("--arch and --shape required unless --all")
+        uleen_shapes = ("train_mnist_scale", "infer_mnist_scale")
+        if (args.arch == "uleen") != (args.shape in uleen_shapes):
+            ap.error(f"--arch uleen pairs only with {uleen_shapes} "
+                     "(and vice versa)")
         cells = [(args.arch, args.shape)]
 
     meshes = {"single": [False], "multi": [True],
@@ -238,7 +281,7 @@ def main(argv=None) -> int:
     failures = 0
     for arch, shp in cells:
         for mp in meshes:
-            rec = run_cell(arch, shp, mp, args.out)
+            rec = run_cell(arch, shp, mp, args.out, backend=args.backend)
             failures += 0 if rec.get("ok") else 1
     print(f"[dryrun] done: {len(cells) * len(meshes) - failures} ok, "
           f"{failures} failed")

@@ -32,6 +32,7 @@ ULN_L_SPEC = UleenSpec(
     bits_per_input=7, dropout_shared_classes=True, bf16_tables=True)
 
 GLOBAL_BATCH = 131072      # fleet-scale data parallelism
+INFER_BATCH = 65536        # fleet-scale serving batch (binary model)
 
 
 def make_uleen_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer):
@@ -90,6 +91,66 @@ def uleen_cell_specs(spec: UleenSpec, mesh, *, global_batch: int = GLOBAL_BATCH)
         rng=rep)
     return dict(params=params, statics=statics, bits=bits, labels=labels,
                 rng=rng), shardings
+
+
+def make_uleen_infer_step(spec: UleenSpec, *, backend: str = "auto"):
+    """Deployed binary-model inference step, backend-dispatched.
+
+    backend threads through `core.model.forward_binary_fused` into
+    `kernels.ops.wnn_scores` (DESIGN §2 "Adoption"): "fused" lowers one
+    Pallas kernel per submodel; "gather" the take_along_axis formulation;
+    "auto" picks per platform (gather on this CPU host, fused on TPU).
+    """
+    def infer_step(tables_bin, masks, bias, statics, bits):
+        statics = [uleen.SubmodelStatic(*s) for s in statics]
+        return uleen.forward_binary_fused(spec, statics, tables_bin, masks,
+                                          bias, bits, backend=backend)
+
+    return infer_step
+
+
+def uleen_infer_specs(spec: UleenSpec, mesh, *,
+                      global_batch: int = INFER_BATCH):
+    """(abstract inputs, shardings) for the inference-cell lowering."""
+    rules = sh.SERVE_RULES
+    rep = sh.named_sharding(mesh, rules, ())
+    tables = tuple(jax.ShapeDtypeStruct(
+        (spec.num_classes, spec.num_filters(sm), sm.entries), jnp.int8)
+        for sm in spec.submodels)
+    masks = tuple(jax.ShapeDtypeStruct(
+        (spec.num_classes, spec.num_filters(sm)), jnp.float32)
+        for sm in spec.submodels)
+    bias = jax.ShapeDtypeStruct((spec.num_classes,), jnp.float32)
+    statics = tuple(
+        (jax.ShapeDtypeStruct((spec.num_filters(sm), sm.inputs_per_filter),
+                              jnp.int32),
+         jax.ShapeDtypeStruct((sm.num_hashes, sm.inputs_per_filter),
+                              jnp.uint32))
+        for sm in spec.submodels)
+    bits = jax.ShapeDtypeStruct((global_batch, spec.total_bits), jnp.bool_)
+    rep_tree = lambda t: jax.tree.map(lambda _: rep, t)
+    shardings = dict(
+        tables=rep_tree(tables), masks=rep_tree(masks), bias=rep,
+        statics=rep_tree(statics),
+        bits=sh.named_sharding(mesh, rules, ("batch", None),
+                               shape=bits.shape))
+    return dict(tables=tables, masks=masks, bias=bias, statics=statics,
+                bits=bits), shardings
+
+
+def lower_uleen_infer_cell(mesh, *, global_batch: int = INFER_BATCH,
+                           spec: UleenSpec = ULN_L_SPEC,
+                           backend: str = "auto"):
+    """AOT lower + compile the deployed inference step on `mesh`."""
+    step = make_uleen_infer_step(spec, backend=backend)
+    ins, shard = uleen_infer_specs(spec, mesh, global_batch=global_batch)
+    with sh.use_mesh(mesh, sh.SERVE_RULES):
+        fn = jax.jit(step, in_shardings=(
+            shard["tables"], shard["masks"], shard["bias"],
+            shard["statics"], shard["bits"]))
+        lowered = fn.lower(ins["tables"], ins["masks"], ins["bias"],
+                           ins["statics"], ins["bits"])
+        return lowered.compile()
 
 
 def lower_uleen_cell(mesh, *, global_batch: int = GLOBAL_BATCH,

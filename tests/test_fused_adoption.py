@@ -1,0 +1,256 @@
+"""Differential battery for the fused-WNN adoption (DESIGN §2 "Adoption").
+
+The contract: the fused Pallas path (`forward_binary_fused` /
+`ops.wnn_scores(backend="fused")`, the deployed TPU formulation) is
+**exactly int32 score-equal** — not just argmax-equal — to the gather
+formulation (`forward_binary`, the training/autodiff reference) on every
+geometry, including the awkward ones: non-MXU-aligned N_f, entries not a
+multiple of 128, k ∈ {1..4}, all-zero pruning masks, masks with values
+> 1, and batches that don't divide the kernel's block_b.
+
+Golden fixtures (tests/golden/, regenerated only by scripts/make_golden.py)
+additionally pin a trained-then-binarized ULN-S model's scores, so kernel
+or export edits cannot silently drift the deployed numbers.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # minimal containers: seeded deterministic shim
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from repro.core import export
+from repro.core.model import (SubmodelSpec, SubmodelStatic, UleenSpec,
+                              compute_hashes, forward_binary,
+                              forward_binary_fused, init_static)
+from repro.kernels import ops, ref
+from repro.kernels.fused_wnn import fused_wnn
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _random_binary_model(key, spec: UleenSpec, mask_kind: str):
+    """Random deployable model: bool tables, masks per `mask_kind`, bias."""
+    statics = init_static(key, spec)
+    tables, masks = [], []
+    for i, sm in enumerate(spec.submodels):
+        key, k_t, k_m = jax.random.split(key, 3)
+        n_f = spec.num_filters(sm)
+        tables.append(jax.random.bernoulli(
+            k_t, 0.4, (spec.num_classes, n_f, sm.entries)))
+        if mask_kind == "zeros":
+            masks.append(jnp.zeros((spec.num_classes, n_f), jnp.float32))
+        elif mask_kind == "random":
+            masks.append(jax.random.bernoulli(
+                k_m, 0.7, (spec.num_classes, n_f)).astype(jnp.float32))
+        else:
+            masks.append(jnp.ones((spec.num_classes, n_f), jnp.float32))
+    key, k_b = jax.random.split(key)
+    bias = jax.random.randint(k_b, (spec.num_classes,), -5, 6
+                              ).astype(jnp.float32)
+    return statics, tuple(tables), tuple(masks), bias
+
+
+def _assert_parity(spec, statics, tables, masks, bias, bits):
+    h = compute_hashes(spec, statics, bits)
+    expect = forward_binary(spec, tables, masks, bias, h)
+    got = forward_binary_fused(spec, statics, tables, masks, bias, bits,
+                               backend="fused")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    # the gather dispatch leg must agree too (same tuples, no hash precompute)
+    got_g = forward_binary_fused(spec, statics, tables, masks, bias, bits,
+                                 backend="gather")
+    np.testing.assert_array_equal(np.asarray(got_g), np.asarray(expect))
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 33),            # batch (incl. 1 and non-pow2)
+       st.integers(4, 24),            # inputs per filter n
+       st.integers(3, 7),             # log2 entries -> E in 8..128
+       st.integers(1, 4),             # hash functions k
+       st.integers(2, 11),            # classes M
+       st.integers(5, 40),            # filters N_f (non-MXU-aligned)
+       st.sampled_from(["ones", "random", "zeros"]))
+def test_fused_matches_gather_randomized(b, n, log2e, k, m, n_f, mask_kind):
+    """Hypothesis sweep: exact int32 score parity across geometries."""
+    seed = b * 100003 + n * 1009 + log2e * 101 + k * 11 + m + n_f
+    key = jax.random.PRNGKey(seed)
+    # total_bits chosen so N_f = ceil(total_bits / n) hits the drawn value
+    spec = UleenSpec(num_classes=m, total_bits=n * n_f,
+                     submodels=(SubmodelSpec(n, log2e, num_hashes=k),))
+    key, k_model, k_bits = jax.random.split(key, 3)
+    statics, tables, masks, bias = _random_binary_model(k_model, spec,
+                                                        mask_kind)
+    bits = jax.random.bernoulli(k_bits, 0.5, (b, spec.total_bits))
+    _assert_parity(spec, statics, tables, masks, bias, bits)
+
+
+def test_fused_matches_gather_multi_submodel_ensemble():
+    """The full adoption path: heterogeneous submodels summed into one
+    ensemble score, ULN-S-like geometry."""
+    spec = UleenSpec(num_classes=10, total_bits=512,
+                     submodels=(SubmodelSpec(12, 6), SubmodelSpec(16, 5),
+                                SubmodelSpec(20, 7, num_hashes=3)),
+                     bits_per_input=2)
+    key = jax.random.PRNGKey(0)
+    statics, tables, masks, bias = _random_binary_model(key, spec, "random")
+    bits = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5,
+                                (37, spec.total_bits))
+    _assert_parity(spec, statics, tables, masks, bias, bits)
+
+
+def test_fused_batch_not_dividing_block_b():
+    """b=130 > block_b=128 forces a padded partial batch tile."""
+    spec = UleenSpec(num_classes=4, total_bits=120,
+                     submodels=(SubmodelSpec(8, 5, num_hashes=2),))
+    key = jax.random.PRNGKey(5)
+    statics, tables, masks, bias = _random_binary_model(key, spec, "random")
+    bits = jax.random.bernoulli(jax.random.PRNGKey(6), 0.5,
+                                (130, spec.total_bits))
+    _assert_parity(spec, statics, tables, masks, bias, bits)
+
+
+def test_all_zero_mask_scores_are_pure_bias():
+    spec = UleenSpec(num_classes=6, total_bits=96,
+                     submodels=(SubmodelSpec(12, 4),))
+    key = jax.random.PRNGKey(9)
+    statics, tables, masks, bias = _random_binary_model(key, spec, "zeros")
+    bits = jax.random.bernoulli(jax.random.PRNGKey(10), 0.5,
+                                (8, spec.total_bits))
+    got = forward_binary_fused(spec, statics, tables, masks, bias, bits,
+                               backend="fused")
+    expect = jnp.broadcast_to(jnp.round(bias).astype(jnp.int32)[None],
+                              got.shape)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    _assert_parity(spec, statics, tables, masks, bias, bits)
+
+
+def test_mask_values_above_one_are_survival_flags_everywhere():
+    """Unified semantics (core/bloom.py::apply_mask): a mask entry of 2 or 7
+    keeps the filter exactly like 1 — it never scales the response — in the
+    Pallas kernel, the jnp oracle, and the gather model path alike."""
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    b, n_f, n, m, e, k = 9, 13, 8, 5, 32, 2
+    tuples = jax.random.bernoulli(ks[0], 0.5, (b, n_f, n)).astype(jnp.int8)
+    params = jax.random.randint(ks[1], (k, n), 0, e, dtype=jnp.int32)
+    table = jax.random.bernoulli(ks[2], 0.4, (m, n_f, e)).astype(jnp.int8)
+    bias = jnp.zeros((m,), jnp.int32)
+    mask01 = jax.random.bernoulli(ks[3], 0.6, (m, n_f)).astype(jnp.int8)
+    mask_big = mask01 * jax.random.randint(ks[3], (m, n_f), 2, 8,
+                                           dtype=jnp.int8)
+    base = ops.wnn_scores(tuples, params, table, mask01, bias,
+                          backend="gather")
+    for mask in (mask01, mask_big):
+        for backend in ("fused", "gather"):
+            got = ops.wnn_scores(tuples, params, table, mask, bias,
+                                 backend=backend)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+    # kernel + oracle directly (below the dispatch layer)
+    np.testing.assert_array_equal(
+        np.asarray(fused_wnn(tuples, params, table, mask_big, bias,
+                             interpret=True)),
+        np.asarray(ref.fused_wnn_ref(tuples, params, table, mask_big, bias)))
+
+
+def test_backend_dispatch_resolution_and_validation():
+    assert ops.resolve_wnn_backend("fused") == "fused"
+    assert ops.resolve_wnn_backend("gather") == "gather"
+    expected_auto = "fused" if jax.default_backend() == "tpu" else "gather"
+    assert ops.resolve_wnn_backend("auto") == expected_auto
+    with pytest.raises(ValueError, match="backend"):
+        ops.resolve_wnn_backend("mosaic")
+
+    tuples = jnp.zeros((2, 3, 4), jnp.int8)
+    params = jnp.zeros((2, 4), jnp.int32)
+    table = jnp.zeros((5, 3, 16), jnp.int8)
+    mask = jnp.zeros((5, 3), jnp.int8)
+    bias = jnp.zeros((5,), jnp.int32)
+    ops.validate_wnn_geometry(tuples, params, table, mask, bias)  # ok
+    with pytest.raises(ValueError, match="power of two"):
+        ops.wnn_scores(tuples, params, jnp.zeros((5, 3, 12), jnp.int8),
+                       mask, bias, backend="gather")
+    with pytest.raises(ValueError, match="N_f"):
+        ops.wnn_scores(tuples, params, jnp.zeros((5, 9, 16), jnp.int8),
+                       mask, bias, backend="fused")
+    with pytest.raises(ValueError, match="params n"):
+        ops.wnn_scores(tuples, jnp.zeros((2, 7), jnp.int32), table,
+                       mask, bias, backend="fused")
+    with pytest.raises(ValueError, match="mask"):
+        ops.wnn_scores(tuples, params, table, jnp.zeros((5, 4), jnp.int8),
+                       bias, backend="fused")
+
+
+# ---------------------------------------------------------------------------
+# Golden regression: frozen trained-then-binarized ULN-S model
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden():
+    art = export.load(os.path.join(GOLDEN_DIR, "uln_s_artifact.npz"))
+    z = np.load(os.path.join(GOLDEN_DIR, "uln_s_golden.npz"))
+    return art, jnp.asarray(z["bits"], jnp.uint8), z["scores"], z["labels"]
+
+
+def _model_from_artifact(art):
+    """Rebuild (spec, statics, tables, masks, bias) from the export."""
+    subs, statics, tables, masks = [], [], [], []
+    for sm in art.submodels:
+        subs.append(SubmodelSpec(sm.inputs_per_filter,
+                                 int(np.log2(sm.entries)), sm.num_hashes))
+        statics.append(SubmodelStatic(perm=jnp.asarray(sm.perm),
+                                      h3=jnp.asarray(sm.h3)))
+        tables.append(jnp.asarray(
+            export.unpack_table(sm.packed, sm.entries)))
+        masks.append(jnp.asarray(sm.mask).astype(jnp.float32))
+    spec = UleenSpec(num_classes=art.num_classes, total_bits=art.total_bits,
+                     submodels=tuple(subs),
+                     bits_per_input=art.bits_per_input)
+    bias = jnp.asarray(art.bias).astype(jnp.float32)
+    return spec, statics, tuple(tables), tuple(masks), bias
+
+
+def test_golden_gather_scores(golden):
+    art, bits, scores, _ = golden
+    spec, statics, tables, masks, bias = _model_from_artifact(art)
+    got = forward_binary(spec, tables, masks, bias,
+                         compute_hashes(spec, statics, bits))
+    np.testing.assert_array_equal(np.asarray(got), scores)
+
+
+def test_golden_fused_scores(golden):
+    art, bits, scores, _ = golden
+    spec, statics, tables, masks, bias = _model_from_artifact(art)
+    got = forward_binary_fused(spec, statics, tables, masks, bias, bits,
+                               backend="fused")
+    np.testing.assert_array_equal(np.asarray(got), scores)
+
+
+@pytest.mark.parametrize("backend", ["fused", "gather", "auto"])
+def test_golden_export_bitstream_scores(golden, backend):
+    """The bit-packed artifact serves the exact golden scores through every
+    backend of `export.artifact_scores`."""
+    art, bits, scores, labels = golden
+    got = export.artifact_scores(art, bits, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), scores)
+    acc = float(np.mean(np.argmax(scores, -1) == labels))
+    assert acc > 0.5, "frozen model must stay far above chance"
+
+
+def test_infer_cell_lowers_with_fused_backend():
+    """The production-mesh inference cell lowers + compiles with the fused
+    backend threaded through (host mesh; interpret-mode Pallas body)."""
+    from repro.launch import uleen_cell
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    for backend in ("fused", "gather"):
+        compiled = uleen_cell.lower_uleen_infer_cell(
+            mesh, global_batch=32, backend=backend)
+        assert compiled.memory_analysis().argument_size_in_bytes > 0
