@@ -1,20 +1,26 @@
-"""E8 — WNN kernel benchmarks at the paper geometries (ULN-S/M/L).
+"""E8 — WNN kernel benchmarks at the paper geometries (ULN-S/M/L/XL).
 
 Sweeps every submodel shape of the model zoo (`benchmarks/model_zoo.py`
-ZOO, the paper's Table I scaled to the 256-px synthetic task) through the
-backend-dispatched inference pipeline (`repro.kernels.ops.wnn_scores`),
-timing the fused Pallas formulation against the gather formulation and
-emitting machine-readable rows to BENCH_kernel.json.
+ZOO, the paper's Table I scaled to the 256-px synthetic task) plus the
+ULN-XL stress geometry through the backend-dispatched inference pipeline
+(`repro.kernels.ops.wnn_scores`), timing the fused int8 Pallas
+formulation, the packed uint32-bitplane formulation, and the gather
+formulation, and emitting machine-readable rows to BENCH_kernel.json.
 
-On TPU both backends are compiled and the fused/gather ratio is the
-adoption argument; on CPU the gather timing is the real serving number
-and the fused kernel runs in interpret mode (bit-exact kernel-body
+On TPU all backends are compiled and the fused/packed-over-gather ratios
+are the adoption argument; on CPU the gather timing is the real serving
+number and the kernels run in interpret mode (bit-exact kernel-body
 execution — a correctness cost, not a TPU projection), so each row
 carries its execution `mode`. Structural numbers for the TPU target
-(VMEM per block, arithmetic intensity) are derived analytically.
+(VMEM per block, arithmetic intensity) are derived analytically; the
+fused backend is *skipped* — recorded as absent with
+`fused_fits_vmem: false` on the geometry's other rows — where its int8
+one-hot block cannot fit the 16 MiB VMEM at any useful tile, which is
+exactly the regime the packed kernel exists for (DESIGN §2 "Packed
+layout").
 
     python benchmarks/kernel_bench.py                  # full sweep
-    python benchmarks/kernel_bench.py --smoke          # one geometry (CI)
+    python benchmarks/kernel_bench.py --smoke          # two geometries (CI)
     python benchmarks/kernel_bench.py --check BENCH_kernel.json
 """
 from __future__ import annotations
@@ -30,12 +36,18 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from benchmarks.model_zoo import ZOO
-from repro.kernels import ops, ref
+from repro.kernels import fused_wnn, ops, packed_wnn, ref
 
-SCHEMA = "kernel_bench/v1"
+SCHEMA = "kernel_bench/v2"
 ROW_KEYS = ("model", "submodel", "backend", "mode", "b", "n_f", "n", "m",
-            "entries", "k", "wall_us")
+            "entries", "k", "wall_us", "vmem_kib", "fused_fits_vmem")
 FEATURES = 256               # benchmark task: 16x16 synthetic MNIST-like
+VMEM_LIMIT = 16 * 2 ** 20    # per-core VMEM on the TPU target
+
+# ULN-XL stress geometry (launch/uleen_cell.py::ULN_XL_SPEC, largest
+# submodel): E = 2^15 overflows the fused kernel's VMEM blocking — only
+# the packed bitplane layout can hold it on-chip.
+XL_GEOMS = [("uln-xl", 0, math.ceil(FEATURES * 8 / 32), 32, 2 ** 15)]
 
 
 def zoo_geometries():
@@ -47,6 +59,17 @@ def zoo_geometries():
             yield (name, i, math.ceil(total_bits / n), n, 2 ** log2e)
 
 
+def fused_vmem_kib(b: int, n: int, m: int, e: int) -> float:
+    bb, bf = fused_wnn.resolve_blocks(b, e)
+    return fused_wnn.block_vmem_bytes(bb, bf, n, m, e) / 1024.0
+
+
+def packed_vmem_kib(b: int, n: int, m: int, e: int) -> float:
+    w = packed_wnn.word_count(e)
+    bb, bf = packed_wnn.resolve_blocks(b, w)
+    return packed_wnn.block_vmem_bytes(bb, bf, n, m, w) / 1024.0
+
+
 def bench_geometry(model: str, sm_idx: int, n_f: int, n: int, e: int, *,
                    b: int = 256, m: int = 10, k: int = 2) -> list[dict]:
     key = jax.random.PRNGKey(zlib.crc32(f"{model}.{sm_idx}".encode()))
@@ -56,39 +79,69 @@ def bench_geometry(model: str, sm_idx: int, n_f: int, n: int, e: int, *,
     table = jax.random.bernoulli(ks[2], 0.3, (m, n_f, e)).astype(jnp.int8)
     mask = jax.random.bernoulli(ks[3], 0.8, (m, n_f)).astype(jnp.int8)
     bias = jnp.zeros((m,), jnp.int32)
+    from repro.packed import pack_words
+    words = pack_words(table.astype(jnp.uint32))
 
     on_tpu = jax.default_backend() == "tpu"
+    fits = fused_vmem_kib(b, n, m, e) * 1024 <= VMEM_LIMIT
+    vmem = {"fused": fused_vmem_kib(b, n, m, e),
+            "packed": packed_vmem_kib(b, n, m, e), "gather": 0.0}
     rows = []
-    for backend in ("fused", "gather"):
-        fn = lambda *a: ops.wnn_scores(*a, backend=backend)
-        us = timeit(fn, tuples, params, table, mask, bias, iters=5, warmup=1)
+    backends = (["fused"] if fits else []) + ["gather", "packed"]
+    for backend in backends:
+        if backend == "packed":
+            fn = lambda *a: ops.wnn_scores(*a, backend="packed", entries=e)
+            args = (tuples, params, words, mask, bias)
+        else:
+            fn = lambda *a, _be=backend: ops.wnn_scores(*a, backend=_be)
+            args = (tuples, params, table, mask, bias)
+        us = timeit(fn, *args, iters=5, warmup=1)
         mode = ("tpu" if on_tpu else
-                "interpret" if backend == "fused" else f"xla-cpu")
+                "interpret" if backend in ("fused", "packed") else "xla-cpu")
         rows.append(dict(model=model, submodel=sm_idx, backend=backend,
                          mode=mode, b=b, n_f=n_f, n=n, m=m, entries=e, k=k,
-                         wall_us=round(us, 1)))
+                         wall_us=round(us, 1),
+                         vmem_kib=round(vmem[backend], 1),
+                         fused_fits_vmem=fits))
         emit(f"kernel.wnn.{model}.sm{sm_idx}.{backend}_us", f"{us:.0f}",
              f"Nf={n_f} n={n} E={e} mode={mode}")
-    fused, gather = rows[0]["wall_us"], rows[1]["wall_us"]
-    emit(f"kernel.wnn.{model}.sm{sm_idx}.fused_over_gather",
-         f"{fused / max(gather, 1e-9):.2f}",
-         "ratio < 1 means fused wins (TPU target; interpret mode on CPU)")
+    by = {r["backend"]: r["wall_us"] for r in rows}
+    for kernel in ("fused", "packed"):
+        if kernel in by:
+            emit(f"kernel.wnn.{model}.sm{sm_idx}.{kernel}_over_gather",
+                 f"{by[kernel] / max(by['gather'], 1e-9):.2f}",
+                 "ratio < 1 means the kernel wins (TPU target; interpret "
+                 "mode on CPU)")
+    if not fits:
+        emit(f"kernel.wnn.{model}.sm{sm_idx}.fused_skipped", "over-vmem",
+             f"int8 one-hot block {vmem['fused']:.0f} KiB > "
+             f"{VMEM_LIMIT // 1024} KiB; packed block "
+             f"{vmem['packed']:.0f} KiB")
     return rows
 
 
 def structural_report() -> None:
-    """Analytical TPU-target numbers for the fused kernel (no hardware)."""
+    """Analytical TPU-target numbers for the kernels (no hardware)."""
     b, n_f, n, m, e, k = 256, 131, 12, 10, 64, 2   # ULN-S SM0-like
-    block_b, block_f = 128, 64
-    vmem = (block_b * block_f * n            # tuples int8
-            + m * block_f * e                # table int8
-            + block_b * block_f * e          # one-hot int8
-            + block_b * m * 4)               # accumulator int32
-    flops = 2 * block_b * m * block_f * e * k     # one-hot matmuls
+    bb, bf = fused_wnn.resolve_blocks(b, e)
+    vmem = fused_wnn.block_vmem_bytes(bb, bf, n, m, e)
+    flops = 2 * bb * m * bf * e * k                # one-hot matmuls
     emit("kernel.fused_wnn.vmem_kib_per_block", f"{vmem / 1024:.0f}",
-         f"block=({block_b},{block_f}) fits 16MiB VMEM: {vmem < 16 * 2**20}")
+         f"block=({bb},{bf}) fits 16MiB VMEM: {vmem < VMEM_LIMIT}")
     emit("kernel.fused_wnn.arith_intensity", f"{flops / max(1, vmem):.1f}",
          "flops per VMEM byte; MXU-aligned dims (E=64, M pad 128)")
+    w = packed_wnn.word_count(e)
+    pbb, pbf = packed_wnn.resolve_blocks(b, w)
+    pvmem = packed_wnn.block_vmem_bytes(pbb, pbf, n, m, w)
+    emit("kernel.packed_wnn.vmem_kib_per_block", f"{pvmem / 1024:.0f}",
+         f"block=({pbb},{pbf}) W={w} words; one-hot 32x narrower, "
+         "table bytes 8x denser")
+    # the headline: largest submodel VMEM at the ULN-XL entry count
+    e_xl = XL_GEOMS[0][4]
+    emit("kernel.packed_wnn.uln_xl_vmem_kib",
+         f"{packed_vmem_kib(256, 32, 10, e_xl):.0f}",
+         f"E=2^15 packed block; int8 would need "
+         f"{fused_vmem_kib(256, 32, 10, e_xl):.0f} KiB (> VMEM)")
 
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 2)
@@ -102,10 +155,13 @@ def structural_report() -> None:
 
 
 def check(path: str) -> int:
-    """Validate a BENCH_kernel.json: schema, row keys, fused/gather pairing.
+    """Validate a BENCH_kernel.json: schema, row keys, backend coverage.
 
-    Returns 0 when well-formed; prints the defect and returns 1 otherwise.
-    The CI benchmark-smoke step runs this after the --smoke sweep.
+    Every geometry needs a gather + packed pair; fused is additionally
+    required exactly when the geometry's rows claim it fits VMEM
+    (`fused_fits_vmem`). Returns 0 when well-formed; prints the defect
+    and returns 1 otherwise. The CI benchmark-smoke step runs this after
+    the --smoke sweep.
     """
     try:
         with open(path) as f:
@@ -121,6 +177,7 @@ def check(path: str) -> int:
         print(f"[check] {path}: no rows")
         return 1
     backends_seen: dict[tuple, set] = {}
+    fits_seen: dict[tuple, bool] = {}
     for i, row in enumerate(rows):
         missing = [kk for kk in ROW_KEYS if kk not in row]
         if missing:
@@ -130,24 +187,32 @@ def check(path: str) -> int:
                 and row["wall_us"] > 0):
             print(f"[check] {path}: row {i} wall_us={row['wall_us']!r}")
             return 1
-        backends_seen.setdefault((row["model"], row["submodel"]),
-                                 set()).add(row["backend"])
-    unpaired = {g for g, bs in backends_seen.items()
-                if not {"fused", "gather"} <= bs}
-    if unpaired:
-        print(f"[check] {path}: geometries missing a fused/gather pair: "
-              f"{sorted(unpaired)}")
+        g = (row["model"], row["submodel"])
+        backends_seen.setdefault(g, set()).add(row["backend"])
+        fits_seen[g] = bool(row["fused_fits_vmem"])
+    bad = []
+    for g, bs in sorted(backends_seen.items()):
+        need = {"gather", "packed"} | ({"fused"} if fits_seen[g] else set())
+        if not need <= bs:
+            bad.append((g, sorted(need - bs)))
+        if not fits_seen[g] and "fused" in bs:
+            bad.append((g, ["fused row despite fused_fits_vmem=false"]))
+    if bad:
+        print(f"[check] {path}: backend coverage defects: {bad}")
         return 1
     print(f"[check] {path}: ok ({len(rows)} rows, "
-          f"{len(backends_seen)} geometries)")
+          f"{len(backends_seen)} geometries, "
+          f"{sum(not v for v in fits_seen.values())} over-VMEM for fused)")
     return 0
 
 
 def main(smoke: bool = False, out: str = "BENCH_kernel.json") -> None:
     rows = []
-    geoms = list(zoo_geometries())
+    geoms = list(zoo_geometries()) + XL_GEOMS
     if smoke:
-        geoms = geoms[:1]                       # ULN-S SM0: CI smoke
+        # CI smoke: one zoo geometry + the over-VMEM XL geometry, so the
+        # packed rows AND the fused-skip path are both exercised.
+        geoms = geoms[:1] + XL_GEOMS
     for model, sm_idx, n_f, n, e in geoms:
         rows.extend(bench_geometry(model, sm_idx, n_f, n, e,
                                    b=64 if smoke else 256))
@@ -162,7 +227,7 @@ def main(smoke: bool = False, out: str = "BENCH_kernel.json") -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="one geometry only (CI benchmark-smoke step)")
+                    help="two geometries only (CI benchmark-smoke step)")
     ap.add_argument("--out", default="BENCH_kernel.json")
     ap.add_argument("--check", metavar="PATH",
                     help="validate an existing BENCH_kernel.json and exit")

@@ -5,8 +5,10 @@ sequence-classification task; a weightless (Bloom-filter WiSARD) head is
 trained on those states with STE, then exported stand-alone — the
 "classification distillation to an extreme-edge artifact" use case.
 
-    PYTHONPATH=src python examples/distill_uleen_head.py
+    PYTHONPATH=src python examples/distill_uleen_head.py --backend packed
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -41,7 +43,7 @@ def pooled_states(cfg, params, tokens):
     return jnp.mean(params["embed"][tokens], axis=1)    # (B, D)
 
 
-def main():
+def main(backend: str = "auto"):
     cfg = get_config("llama3p2_3b", smoke=True)
     backbone = transformer.init_params(cfg, jax.random.PRNGKey(0))
     tokens, y = make_task(cfg, jax.random.PRNGKey(1))
@@ -85,6 +87,20 @@ def main():
           f"{bits / 8 / 1024:.1f} KiB if exported standalone")
     assert acc > 0.5
 
+    # deployed formulation: binarize the head and serve it through the
+    # backend-dispatched WNN pipeline (DESIGN §2 "Adoption"/"Packed
+    # layout") — exactly what the exported edge artifact would run
+    dep = apply_head(head_cfg, state._replace(params=params), h_te,
+                     backend=backend)
+    dep_acc = float(jnp.mean(jnp.argmax(dep, -1) == y_te))
+    print(f"{backend}-backend deployed head: {dep_acc:.1%} "
+          "(binarized tables, int32 scores)")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend",
+                    choices=["fused", "gather", "packed", "auto"],
+                    default="auto",
+                    help="deployed WNN inference backend (DESIGN §2)")
+    main(backend=ap.parse_args().backend)

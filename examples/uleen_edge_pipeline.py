@@ -49,17 +49,21 @@ def main(backend: str = "auto"):
                                                       batch_size=128,
                                                       learning_rate=5e-3))
     art = export.export_model(spec, statics, res.params)
-    print(f"trained: {res.val_accuracy:.1%} @ {art.size_kib:.1f} KiB; "
+    print(f"trained: {res.val_accuracy:.1%} @ {art.size_kib:.1f} KiB "
+          f"({art.packed_size_kib:.1f} KiB word-aligned packed); "
           f"{art.hash_ops_per_inference} hash ops + "
           f"{art.lookups_per_inference} lookups / inference")
 
     # --- serve through the backend-dispatched WNN pipeline ---
+    # "packed"/"auto" serve the artifact's native uint32 bitplanes (no
+    # int8 table ever materializes, DESIGN §2 "Packed layout"); tables
+    # are prepared once (export.prepare_artifact) and cached.
     batch = bits_te[:256]
     t0 = time.time()
     scores = export.artifact_scores(art, batch, backend=backend)
     pred = jnp.argmax(scores, -1)
     acc = float(jnp.mean(pred == ds.y_test[:256]))
-    mode = ("interpret" if backend == "fused"
+    mode = ("interpret" if backend in ("fused", "packed")
             and jax.default_backend() != "tpu" else jax.default_backend())
     print(f"{backend}-backend serving: {acc:.1%} on 256 requests "
           f"({time.time() - t0:.1f}s, {mode})")
@@ -80,6 +84,7 @@ def main(backend: str = "auto"):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--backend", choices=["fused", "gather", "auto"],
+    ap.add_argument("--backend",
+                    choices=["fused", "gather", "packed", "auto"],
                     default="auto", help="WNN inference backend (DESIGN §2)")
     main(backend=ap.parse_args().backend)

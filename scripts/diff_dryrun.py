@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Diff two dry-run sweeps' per-cell peak GiB and fail on regressions.
+
+The nightly CI job (`.github/workflows/ci.yml`, ROADMAP "Dry-run sweep in
+CI") runs `repro.launch.dryrun --all`, which already fails on any
+`ok: false` cell; this script closes the remaining gap — a cell that
+still *compiles* but got materially fatter must also fail. It compares
+the fresh sweep against the previous nightly's uploaded JSON artifacts:
+
+    python scripts/diff_dryrun.py results/nightly results/previous \
+        --tol 0.05 --slack-gib 0.01
+
+A cell regresses when  new_peak > old_peak * (1 + tol) + slack  (the
+absolute slack keeps sub-1% noise on tiny cells from tripping the 5%
+gate). Cells present only on one side are reported informationally.
+Exit 0 when the previous directory is missing/empty (first nightly) or
+no cell regresses; 1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load_records(root: str) -> dict[str, dict]:
+    """tag -> record, recursing so artifact-download subdirs work; on
+    duplicate tags the lexically last path wins (most recent artifact)."""
+    out: dict[str, dict] = {}
+    rootp = pathlib.Path(root)
+    if not rootp.exists():
+        return out
+    for path in sorted(rootp.rglob("*.json")):
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            print(f"[diff] skipping unreadable {path}")
+            continue
+        if isinstance(rec, dict) and "ok" in rec:
+            out[path.stem] = rec
+    return out
+
+
+def peak_gib(rec: dict):
+    mem = rec.get("memory") or {}
+    return mem.get("peak_gib")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new_dir", help="fresh sweep output dir")
+    ap.add_argument("prev_dir", help="previous nightly's artifacts dir")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="relative peak-GiB growth allowed (default 5%%)")
+    ap.add_argument("--slack-gib", type=float, default=0.01,
+                    help="absolute slack added to the gate")
+    args = ap.parse_args(argv)
+
+    new = load_records(args.new_dir)
+    prev = load_records(args.prev_dir)
+    if not new:
+        print(f"[diff] no records in {args.new_dir}: nothing to gate")
+        return 1
+    if not prev:
+        print(f"[diff] no previous records under {args.prev_dir} "
+              "(first nightly?) — skipping the regression gate")
+        return 0
+
+    regressions = []
+    compared = 0
+    for tag in sorted(new):
+        if tag not in prev:
+            print(f"[diff] NEW cell {tag}: "
+                  f"peak={peak_gib(new[tag])} GiB (no baseline)")
+            continue
+        np_, pp = peak_gib(new[tag]), peak_gib(prev[tag])
+        if not (new[tag].get("ok") and prev[tag].get("ok")) \
+                or np_ is None or pp is None:
+            continue   # ok:false already fails the sweep itself
+        compared += 1
+        limit = pp * (1.0 + args.tol) + args.slack_gib
+        marker = ""
+        if np_ > limit:
+            regressions.append(tag)
+            marker = "  <-- REGRESSION"
+        if marker or abs(np_ - pp) > 1e-6:
+            print(f"[diff] {tag}: {pp:.3f} -> {np_:.3f} GiB "
+                  f"(limit {limit:.3f}){marker}")
+    for tag in sorted(set(prev) - set(new)):
+        print(f"[diff] cell {tag} vanished from the sweep "
+              f"(was {peak_gib(prev[tag])} GiB)")
+
+    if regressions:
+        print(f"[diff] {len(regressions)}/{compared} cells regressed "
+              f"past +{args.tol:.0%}: {regressions}")
+        return 1
+    print(f"[diff] ok: {compared} cells within +{args.tol:.0%} "
+          f"of the previous nightly")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,7 @@ the way the paper reports it (surviving filters x entries bits).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -39,6 +39,15 @@ class InferenceArtifact:
     def size_kib(self) -> float:
         bits = sum(int(sm.mask.sum()) * sm.entries for sm in self.submodels)
         return bits / 8.0 / 1024.0
+
+    @property
+    def packed_size_kib(self) -> float:
+        """Surviving-table storage in the word-aligned packed layout —
+        what the accelerator (and the packed serve path) actually holds:
+        4 bytes per uint32 word, E < 32 rounded up to one word."""
+        by = sum(int(sm.mask.sum()) * sm.packed.shape[-1] * 4
+                 for sm in self.submodels)
+        return by / 1024.0
 
     @property
     def hash_ops_per_inference(self) -> int:
@@ -91,32 +100,101 @@ def export_model(spec: UleenSpec, statics: Sequence[SubmodelStatic],
                              bits_per_input=spec.bits_per_input)
 
 
+class UnpackedTables(NamedTuple):
+    """Device-resident 32× expansion of an artifact for the int8 backends
+    (fused/gather). Built once by `prepare_artifact`, never inside a
+    traced function."""
+    tables: tuple    # per submodel (M, N_f, E) int8
+    masks: tuple     # (M, N_f) int8
+    perms: tuple     # (N_f, n) int32
+    h3s: tuple       # (k, n) int32
+    bias: jnp.ndarray  # (M,) int32
+
+
+def prepare_artifact(artifact: InferenceArtifact, *, backend: str = "auto"):
+    """Hoisted, cached table preparation for repeated serving.
+
+    backend="packed"/"auto" lifts the artifact's uint32 word planes into a
+    `repro.packed.PackedTables` verbatim (no expansion at all);
+    "fused"/"gather" unpack to int8 device tables exactly ONCE. The result
+    is memoized on the artifact instance per backend, so the traced serve
+    path (`artifact_scores`, `launch.scheduler.WnnBatcher`) never redoes
+    the 32× expansion — or any table work — per batch.
+    """
+    cache = getattr(artifact, "_prepared", None)
+    if cache is None:
+        cache = artifact._prepared = {}
+    if backend in cache:
+        return cache[backend]
+    from repro.kernels import ops  # late import: export is also numpy-only IO
+    ops.resolve_wnn_backend(backend)     # reject unknown names eagerly
+    # one prepared object per REPRESENTATION: PackedTables serves both
+    # packed-domain backends, one UnpackedTables serves both int8 ones
+    packed_domain = backend in ("auto", "packed")
+    other = {"auto": "packed", "packed": "auto",
+             "fused": "gather", "gather": "fused"}[backend]
+    if other in cache:
+        prep = cache[other]
+    elif packed_domain:
+        from repro import packed
+        prep = packed.from_artifact(artifact)
+    else:
+        prep = UnpackedTables(
+            tables=tuple(jnp.asarray(unpack_table(sm.packed, sm.entries),
+                                     jnp.int8) for sm in artifact.submodels),
+            masks=tuple(jnp.asarray(sm.mask).astype(jnp.int8)
+                        for sm in artifact.submodels),
+            perms=tuple(jnp.asarray(sm.perm, jnp.int32)
+                        for sm in artifact.submodels),
+            h3s=tuple(jnp.asarray(sm.h3).astype(jnp.int32)
+                      for sm in artifact.submodels),
+            bias=jnp.asarray(artifact.bias, jnp.int32))
+    cache[backend] = prep
+    return prep
+
+
+def scores_from_prep(prep, bits: jnp.ndarray, *,
+                     backend: str = "auto") -> jnp.ndarray:
+    """Backend-dispatched scores from prepared tables (jit-traceable).
+
+    THE serve loop — `artifact_scores` and the serve engine's batch path
+    (`launch.scheduler.WnnBatcher`) both route through here, so the
+    per-submodel dispatch/mask/bias semantics cannot drift between them.
+    """
+    if not isinstance(prep, UnpackedTables):
+        from repro.packed import runtime
+        return runtime.packed_scores(prep, bits, backend=backend)
+    from repro.kernels import ops
+    m = prep.bias.shape[0]
+    scores = jnp.zeros((bits.shape[0], m), jnp.int32)
+    zero_bias = jnp.zeros((m,), jnp.int32)
+    for table, mask, perm, h3 in zip(prep.tables, prep.masks, prep.perms,
+                                     prep.h3s):
+        tuples = bits[:, perm].astype(jnp.int8)
+        scores = scores + ops.wnn_scores(tuples, h3, table, mask, zero_bias,
+                                         backend=backend)
+    return scores + prep.bias[None]
+
+
 def artifact_scores(artifact: InferenceArtifact, bits: jnp.ndarray, *,
                     backend: str = "auto") -> jnp.ndarray:
     """Serve encoded inputs straight from the deployable artifact.
 
-    bits: (B, total_bits) bool/int {0,1} -> scores (B, M) int32, through the
-    backend-dispatched WNN pipeline (`kernels.ops.wnn_scores`): unpack each
-    submodel's bit-packed table, slice its tuples via the stored input
-    permutation, and run hash -> lookup -> AND -> popcount once per
-    submodel; backend="fused" is the paper's whole accelerator as one
-    Pallas kernel per submodel (DESIGN §2 "Adoption").
+    bits: (B, total_bits) bool/int {0,1} -> scores (B, M) int32, through
+    the backend-dispatched WNN pipeline (`kernels.ops.wnn_scores`), one
+    dispatch per submodel on tuples sliced via the stored permutation.
+
+    backend="packed"/"auto" serves the artifact's native uint32 bitplanes
+    (DESIGN §2 "Packed layout") — the traced path contains no int8 table
+    and no unpack; "fused"/"gather" serve the int8 expansion, prepared
+    once and cached by `prepare_artifact`, never re-unpacked per call.
 
     Bit-identical to `model.forward_binary` on the pre-export params —
-    the golden fixtures in tests/test_fused_adoption.py pin all three.
+    the golden fixtures in tests/test_fused_adoption.py and
+    tests/test_packed.py pin every backend.
     """
-    from repro.kernels import ops  # late import: export is also numpy-only IO
-    bits = jnp.asarray(bits)
-    scores = jnp.zeros((bits.shape[0], artifact.num_classes), jnp.int32)
-    for sm in artifact.submodels:
-        tuples = bits[:, jnp.asarray(sm.perm)].astype(jnp.int8)
-        table = jnp.asarray(unpack_table(sm.packed, sm.entries)
-                            ).astype(jnp.int8)
-        scores = scores + ops.wnn_scores(
-            tuples, jnp.asarray(sm.h3).astype(jnp.int32), table,
-            jnp.asarray(sm.mask).astype(jnp.int8),
-            jnp.zeros((artifact.num_classes,), jnp.int32), backend=backend)
-    return scores + jnp.asarray(artifact.bias)[None]
+    prep = prepare_artifact(artifact, backend=backend)
+    return scores_from_prep(prep, jnp.asarray(bits), backend=backend)
 
 
 def save(artifact: InferenceArtifact, path: str) -> None:

@@ -78,13 +78,31 @@ def encode_hidden(cfg: UleenHeadConfig, state: UleenHeadState,
 
 
 def apply_head(cfg: UleenHeadConfig, state: UleenHeadState, h: jnp.ndarray,
-               *, train: bool = False, rng=None) -> jnp.ndarray:
-    """Pooled hidden states -> (B, num_classes) ensemble scores."""
+               *, train: bool = False, rng=None,
+               backend: str | None = None) -> jnp.ndarray:
+    """Pooled hidden states -> (B, num_classes) ensemble scores.
+
+    backend=None (default) is the continuous training/eval forward (STE
+    tables, float scores). A WNN backend name ("fused" | "gather" |
+    "packed" | "auto") instead binarizes the head and routes it through
+    the backend-dispatched deployment pipeline (`kernels.ops.wnn_scores`
+    via `forward_binary_fused`, DESIGN §2 "Adoption") — int32 scores,
+    exactly what the exported edge artifact of this head would serve.
+    """
     spec = cfg.spec()
     bits = encode_hidden(cfg, state, jax.lax.stop_gradient(h)
                          if not cfg.backbone_grad else h)
-    hashes = uleen_model.compute_hashes(spec, state.statics, bits > 0
-                                        if bits.dtype != jnp.bool_ else bits)
+    bits_b = bits > 0 if bits.dtype != jnp.bool_ else bits
+    if backend is not None:
+        if train:
+            raise ValueError("backend= serves the binarized deployment "
+                             "path; training uses the continuous forward "
+                             "(backend=None)")
+        tables_bin, masks, bias = uleen_model.binarize_params(state.params)
+        return uleen_model.forward_binary_fused(
+            spec, state.statics, tables_bin, masks, bias, bits_b,
+            backend=backend)
+    hashes = uleen_model.compute_hashes(spec, state.statics, bits_b)
     return uleen_model.forward(spec, state.params, hashes, train=train, rng=rng)
 
 

@@ -56,6 +56,16 @@ class ModelCounts:
     num_classes: int
     max_filters: int          # widest discriminator (adder tree depth)
     num_submodels: int
+    # word-aligned uint32 storage (4-byte granularity) when derived from a
+    # real artifact's packed planes; 0 for hand-built calibration counts
+    packed_table_bytes: int = 0
+
+    @property
+    def table_bytes(self) -> int:
+        """Packed table storage the memory system actually holds — the
+        measured word planes when available, else table_bits rounded up
+        to whole bytes (1 bit per entry either way)."""
+        return self.packed_table_bytes or -(-self.table_bits // 8)
 
     @property
     def compressed_input_bits(self) -> int:
@@ -69,10 +79,18 @@ class ModelCounts:
 
 
 def counts_from_artifact(art) -> ModelCounts:
-    """ModelCounts from a repro.core.export.InferenceArtifact."""
+    """ModelCounts from a repro.core.export.InferenceArtifact.
+
+    Table storage is read off the artifact's packed uint32 word planes
+    (`sm.packed.shape[-1]` words × 32 bits), so the hardware model
+    accounts the word-aligned bytes the accelerator (and the packed serve
+    path, DESIGN §2 "Packed layout") actually holds — identical to
+    surviving × entries for E ≥ 32, rounded up to one word below that.
+    """
     hash_ops = sum(sm.perm.shape[0] * sm.num_hashes for sm in art.submodels)
     lookups = sum(int(sm.mask.sum()) * sm.num_hashes for sm in art.submodels)
-    table_bits = sum(int(sm.mask.sum()) * sm.entries for sm in art.submodels)
+    table_bits = sum(int(sm.mask.sum()) * sm.packed.shape[-1] * 32
+                     for sm in art.submodels)
     adds = sum(int(sm.mask.sum()) for sm in art.submodels) + \
         art.num_classes * (len(art.submodels) + 1)
     max_f = max(sm.perm.shape[0] for sm in art.submodels)
@@ -81,7 +99,8 @@ def counts_from_artifact(art) -> ModelCounts:
                        hash_ops=hash_ops, lookups=lookups,
                        table_bits=table_bits, adds=adds,
                        num_classes=art.num_classes, max_filters=max_f,
-                       num_submodels=len(art.submodels))
+                       num_submodels=len(art.submodels),
+                       packed_table_bytes=table_bits // 8)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -211,8 +211,11 @@ def forward_binary_fused(spec: UleenSpec, statics: Sequence[SubmodelStatic],
     `backend="fused"` each submodel is ONE Pallas kernel launch
     (hash → one-hot MXU lookup → AND → popcount), the paper's whole
     accelerator pipeline; `"gather"` runs the jnp oracle on the same
-    tuples and is bit-identical; `"auto"` picks per platform
-    (DESIGN §2 "Adoption").
+    tuples and is bit-identical; `"packed"` runs the uint32 bitplane
+    kernel (the int8 tables are packed at trace time — steady-state
+    serving should pack once via `binarize_to_packed` /
+    `repro.packed.packed_scores` instead); `"auto"` picks per platform
+    (DESIGN §2 "Adoption" + "Packed layout").
 
     Only the H3 hash family is fused (the paper's central hash block).
     Models hashed with `murmur`/`identity` must go through
@@ -240,3 +243,19 @@ def binarize_params(params: UleenParams) -> tuple[tuple[jnp.ndarray, ...],
     """Continuous training state -> deployable binary model."""
     tables_bin = tuple(bloom.binarize_continuous(t) for t in params.tables)
     return tables_bin, params.masks, params.bias
+
+
+def binarize_to_packed(spec: UleenSpec, statics: Sequence[SubmodelStatic],
+                       params: UleenParams):
+    """Continuous training state -> `repro.packed.PackedTables`.
+
+    The export-time pack (the one place int8/bool tables legitimately
+    materialize); serve through `repro.packed.packed_scores`, which keeps
+    the uint32 bitplanes native end-to-end (DESIGN §2 "Packed layout").
+    """
+    from repro import packed  # late import: core must not import pallas
+    tables_bin, masks, bias = binarize_params(params)
+    return packed.from_binary_model(
+        statics, tables_bin, masks, bias,
+        entries=[sm.entries for sm in spec.submodels],
+        num_classes=spec.num_classes)

@@ -35,6 +35,28 @@ def _h3_hashes(bits_i32: jnp.ndarray, params_row) -> jnp.ndarray:
     return acc
 
 
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def resolve_blocks(b: int, entries: int, *, block_b: int = 128,
+                   block_f: int = 256) -> tuple[int, int]:
+    """(block_b, block_f) after the VMEM budget clamp: the one-hot is
+    (Bt, Ft, E) int8, so Ft scales inversely with E."""
+    block_b = min(block_b, max(8, b))
+    block_f = min(block_f,
+                  max(8, VMEM_BUDGET // max(1, block_b * entries)))
+    return block_b, block_f
+
+
+def block_vmem_bytes(block_b: int, block_f: int, n: int, m: int,
+                     entries: int) -> int:
+    """Analytical VMEM footprint of one block (bench + DESIGN arithmetic)."""
+    return (block_b * block_f * n            # tuples int8
+            + m * block_f * entries          # table int8
+            + block_b * block_f * entries    # one-hot int8
+            + block_b * m * 4)               # accumulator int32
+
+
 def fused_wnn_kernel(tuples_ref, params_ref, table_ref, mask_ref, bias_ref,
                      out_ref, *, entries: int, num_hashes: int):
     f_idx = pl.program_id(1)
@@ -80,10 +102,9 @@ def fused_wnn(tuples: jnp.ndarray, params: jnp.ndarray, table: jnp.ndarray,
     b, n_f, n = tuples.shape
     m, _, entries = table.shape
     k = params.shape[0]
-    block_b = min(block_b, max(8, b))
     # VMEM budget: one-hot is (Bt, Ft, E) int8; keep it under ~4 MiB.
-    budget = 4 * 1024 * 1024
-    block_f = min(block_f, max(8, budget // max(1, block_b * entries)))
+    block_b, block_f = resolve_blocks(b, entries, block_b=block_b,
+                                      block_f=block_f)
     pb, pf = (-b) % block_b, (-n_f) % block_f
     if pb or pf:
         tuples = jnp.pad(tuples, ((0, pb), (0, pf), (0, 0)))

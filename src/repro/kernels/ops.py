@@ -16,7 +16,9 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_tiled
 from repro.kernels.fused_wnn import fused_wnn
 from repro.kernels.h3_hash import h3_hash_tiled
+from repro.kernels.packed_wnn import packed_wnn
 from repro.kernels.thermometer import thermometer_decompress, thermometer_encode
+from repro.packed import layout as packed_layout
 
 
 def _on_tpu() -> bool:
@@ -24,10 +26,10 @@ def _on_tpu() -> bool:
 
 
 # ---------------------------------------------------------------------------
-# WNN inference backend dispatch (DESIGN §2 "Adoption")
+# WNN inference backend dispatch (DESIGN §2 "Adoption" + "Packed layout")
 # ---------------------------------------------------------------------------
 
-WNN_BACKENDS = ("fused", "gather", "auto")
+WNN_BACKENDS = ("fused", "gather", "packed", "auto")
 
 # The fused kernel unrolls the H3 XOR-select over n and the k hash lookups in
 # the kernel body; these bound the unroll so a bad spec fails loudly at trace
@@ -36,36 +38,59 @@ _MAX_TUPLE_BITS = 64
 _MAX_HASHES = 8
 
 
-def resolve_wnn_backend(backend: str = "auto") -> str:
-    """'auto' -> 'fused' on TPU (the MXU formulation), 'gather' elsewhere
-    (plain-XLA gathers beat an interpret-mode kernel on CPU)."""
+def resolve_wnn_backend(backend: str = "auto", *,
+                        packed_tables: bool = False) -> str:
+    """'auto' -> 'packed' when the tables are already uint32 bitplanes
+    (never pay the 32× expansion), else 'fused' on TPU (the MXU
+    formulation) / 'gather' elsewhere (plain-XLA gathers beat an
+    interpret-mode kernel on CPU)."""
     if backend not in WNN_BACKENDS:
         raise ValueError(
             f"backend must be one of {WNN_BACKENDS}, got {backend!r}")
     if backend == "auto":
+        if packed_tables:
+            return "packed"
         return "fused" if _on_tpu() else "gather"
     return backend
 
 
-def validate_wnn_geometry(tuples, params, table, mask, bias) -> None:
+def validate_wnn_geometry(tuples, params, table, mask, bias, *,
+                          entries: int | None = None) -> None:
     """Shape/tile validation shared by every backend.
 
-    Raises ValueError at trace time for geometry the fused kernel cannot
-    honour bit-exactly — most importantly non-power-of-two `entries`: H3
-    XOR-composes parameter words in [0, E), which stays in-range only when
-    E is a power of two; out-of-range hashes would one-hot to zero in the
-    fused kernel but clip in the gather's `take_along_axis`.
+    `table` is either an unpacked (M, N_f, E) int8 table or a packed
+    (M, N_f, E/32) uint32 bitplane (distinguished by dtype; packed planes
+    must declare `entries` since E is not recoverable from the word
+    count). Raises ValueError at trace time for geometry the kernels
+    cannot honour bit-exactly — most importantly non-power-of-two
+    `entries`: H3 XOR-composes parameter words in [0, E), which stays
+    in-range only when E is a power of two; out-of-range hashes would
+    one-hot to zero in the fused kernel but clip in the gather's
+    `take_along_axis` (and address the wrong word in the packed layout).
     """
     if tuples.ndim != 3:
         raise ValueError(f"tuples must be (B, N_f, n), got {tuples.shape}")
     if params.ndim != 2 or table.ndim != 3 or mask.ndim != 2 or bias.ndim != 1:
         raise ValueError(
-            "expected params (k, n), table (M, N_f, E), mask (M, N_f), "
-            f"bias (M,); got {params.shape}, {table.shape}, {mask.shape}, "
-            f"{bias.shape}")
+            "expected params (k, n), table (M, N_f, E) or packed "
+            f"(M, N_f, E/32), mask (M, N_f), bias (M,); got {params.shape}, "
+            f"{table.shape}, {mask.shape}, {bias.shape}")
     _, n_f, n = tuples.shape
     k, n_p = params.shape
-    m, n_f_t, entries = table.shape
+    m, n_f_t, last = table.shape
+    if table.dtype == jnp.uint32:
+        if entries is None:
+            raise ValueError(
+                "packed uint32 tables must declare entries= (the word "
+                "count alone does not determine E)")
+        packed_layout.validate_packed_geometry(table, entries)
+    else:
+        if entries is not None and entries != last:
+            raise ValueError(
+                f"entries={entries} != table E={last}")
+        if last & (last - 1) or last == 0:
+            raise ValueError(
+                f"entries={last} must be a power of two (H3 range closure)")
     if n_p != n:
         raise ValueError(f"params n={n_p} != tuples n={n}")
     if n_f_t != n_f:
@@ -74,9 +99,6 @@ def validate_wnn_geometry(tuples, params, table, mask, bias) -> None:
         raise ValueError(f"mask {mask.shape} != (M, N_f)=({m}, {n_f})")
     if bias.shape != (m,):
         raise ValueError(f"bias {bias.shape} != (M,)=({m},)")
-    if entries & (entries - 1) or entries == 0:
-        raise ValueError(
-            f"entries={entries} must be a power of two (H3 range closure)")
     if n > _MAX_TUPLE_BITS:
         raise ValueError(f"n={n} exceeds the kernel unroll bound "
                          f"{_MAX_TUPLE_BITS}")
@@ -84,23 +106,53 @@ def validate_wnn_geometry(tuples, params, table, mask, bias) -> None:
         raise ValueError(f"k={k} outside [1, {_MAX_HASHES}]")
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
-def wnn_scores(tuples, params, table, mask, bias, *, backend: str = "auto"):
+@functools.partial(jax.jit, static_argnames=("backend", "entries"))
+def wnn_scores(tuples, params, table, mask, bias, *, backend: str = "auto",
+               entries: int | None = None):
     """One submodel's inference scores (B, M) int32, backend-dispatched.
 
-    tuples: (B, N_f, n) int8 {0,1}; params: (k, n) int32; table: (M, N_f, E)
-    int8 {0,1}; mask: (M, N_f) int8; bias: (M,) int32.
+    tuples: (B, N_f, n) int8 {0,1}; params: (k, n) int32; table:
+    (M, N_f, E) int8 {0,1} or packed (M, N_f, E/32) uint32 bitplanes
+    (dtype-dispatched; packed input requires the static `entries=`);
+    mask: (M, N_f) int8; bias: (M,) int32.
 
-    backend="fused"  — the Pallas kernel (interpret mode off-TPU, so the
-                       exact TPU kernel body runs bit-for-bit on CPU);
+    backend="fused"  — the one-hot MXU Pallas kernel on int8 tables
+                       (interpret mode off-TPU, so the exact TPU kernel
+                       body runs bit-for-bit on CPU);
     backend="gather" — the jnp take_along_axis oracle (`ref.fused_wnn_ref`);
-    backend="auto"   — fused on TPU, gather elsewhere.
+    backend="packed" — the bitplane Pallas kernel (`packed_wnn`): word
+                       gather via one-hot over E/32 uint32 words +
+                       shift/AND bit extract; interpret mode off-TPU.
+                       int8 tables are packed at trace time (a tests/
+                       bench convenience — serving packs once, see
+                       `repro.packed`);
+    backend="auto"   — packed when the tables arrive packed (off-TPU via
+                       the packed-domain XLA oracle `ref.packed_wnn_ref`,
+                       the fast CPU formulation that still never unpacks);
+                       otherwise fused on TPU, gather elsewhere.
 
-    Both backends are exactly score-equal by contract
-    (tests/test_fused_adoption.py enforces int32 equality).
+    All backends are exactly score-equal by contract
+    (tests/test_fused_adoption.py + tests/test_packed.py enforce int32
+    equality).
     """
-    validate_wnn_geometry(tuples, params, table, mask, bias)
-    if resolve_wnn_backend(backend) == "fused":
+    packed_in = table.dtype == jnp.uint32
+    validate_wnn_geometry(tuples, params, table, mask, bias, entries=entries)
+    resolved = resolve_wnn_backend(backend, packed_tables=packed_in)
+    if resolved == "packed":
+        words = table if packed_in else packed_layout.pack_words(
+            table.astype(jnp.uint32))
+        if _on_tpu():
+            return packed_wnn(tuples, params, words, mask, bias)
+        if backend == "packed":   # explicit: bit-for-bit kernel body
+            return packed_wnn(tuples, params, words, mask, bias,
+                              interpret=True)
+        return ref.packed_wnn_ref(tuples, params, words, mask, bias)
+    if packed_in:
+        raise ValueError(
+            f"backend={resolved!r} needs unpacked (M, N_f, E) int8 tables "
+            "but got uint32 bitplanes — use backend='packed'/'auto', or "
+            "down-convert explicitly via repro.packed.layout.unpack_words")
+    if resolved == "fused":
         return fused_wnn(tuples, params, table, mask, bias,
                          interpret=not _on_tpu())
     return ref.fused_wnn_ref(tuples, params, table, mask, bias)

@@ -28,6 +28,28 @@ def fused_wnn_ref(tuples: jnp.ndarray, params: jnp.ndarray,
     return jnp.sum(resp, axis=-1) + bias.astype(jnp.int32)[None, :]
 
 
+def packed_wnn_ref(tuples: jnp.ndarray, params: jnp.ndarray,
+                   words: jnp.ndarray, mask: jnp.ndarray,
+                   bias: jnp.ndarray) -> jnp.ndarray:
+    """Packed-domain oracle: gather the (hash >> 5) uint32 word, extract
+    the addressed bit with shift/AND — never materializes an int8 table.
+    words: (M, N_f, W) uint32 bitplanes (core/export.py::pack_table
+    layout); exactly score-equal to `fused_wnn_ref` on the unpacked table.
+    """
+    hashes = h3_hash_ref(tuples, params)                       # (B, N_f, k)
+    words_i32 = jax.lax.bitcast_convert_type(words, jnp.int32)
+
+    def one(h):  # (N_f, k) -> (M, N_f, k) addressed bits
+        w = jnp.take_along_axis(words_i32, (h >> 5)[None], axis=2)
+        return (w >> (h & 31)[None]) & 1
+
+    vals = jax.vmap(one)(hashes)                               # (B, M, N_f, k)
+    resp = jnp.min(vals, axis=-1)                              # AND for {0,1}
+    # survive iff nonzero (core/bloom.py::apply_mask semantics)
+    resp = resp * (mask != 0).astype(jnp.int32)[None]
+    return jnp.sum(resp, axis=-1) + bias.astype(jnp.int32)[None, :]
+
+
 def thermometer_ref(x: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
     return (x[:, :, None] > thresholds[None]).astype(jnp.int8)
 

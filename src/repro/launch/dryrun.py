@@ -131,29 +131,41 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
 
     shape="train_mnist_scale" lowers the multi-shot STE training step;
     shape="infer_mnist_scale" lowers the deployed binary-inference step with
-    the WNN kernel `backend` flag threaded through (DESIGN §2 "Adoption").
+    the WNN kernel `backend` flag threaded through (DESIGN §2 "Adoption");
+    shape="infer_packed_scale" lowers the packed-domain inference step
+    (uint32 bitplane tables end-to-end, `repro.packed`) at the ULN-XL
+    geometry the int8 kernel cannot block (DESIGN §2 "Packed layout").
     """
     from repro.launch import uleen_cell
-    if shape not in ("train_mnist_scale", "infer_mnist_scale"):
-        raise ValueError(f"uleen cells lower only train_mnist_scale / "
-                         f"infer_mnist_scale, got {shape!r}")
+    uleen_shapes = ("train_mnist_scale", "infer_mnist_scale",
+                    "infer_packed_scale")
+    if shape not in uleen_shapes:
+        raise ValueError(f"uleen cells lower only {uleen_shapes}, "
+                         f"got {shape!r}")
     mesh = make_production_mesh(multi_pod=multi_pod)
-    infer = shape == "infer_mnist_scale"
-    tag = f"uleen_uln_l.{shape}.{'pod2' if multi_pod else 'pod1'}"
+    infer = shape != "train_mnist_scale"
+    packed_cell = shape == "infer_packed_scale"
+    arch_tag = "uleen_uln_xl" if packed_cell else "uleen_uln_l"
+    tag = f"{arch_tag}.{shape}.{'pod2' if multi_pod else 'pod1'}"
     if infer:
         tag += f".{backend}"
-    # What the fused flag actually lowers on this process's devices: the
+    # What the backend flag actually lowers on this process's devices: the
     # Mosaic kernel on TPU, its interpret-mode (lax-level) emulation on the
     # placeholder CPU mesh — the record must say which, like BENCH_kernel
-    # rows do, so fused-vs-gather comparisons aren't read off emulation.
+    # rows do, so backend comparisons aren't read off emulation.
     from repro.kernels import ops as wnn_ops
-    resolved = wnn_ops.resolve_wnn_backend(backend)
+    resolved = wnn_ops.resolve_wnn_backend(backend,
+                                           packed_tables=packed_cell)
     on_tpu = jax.default_backend() == "tpu"
-    kernel_mode = ("mosaic" if resolved == "fused" and on_tpu else
-                   "interpret" if resolved == "fused" else "xla")
+    kernel_mode = ("mosaic" if resolved in ("fused", "packed") and on_tpu
+                   else "interpret" if backend in ("fused", "packed")
+                   else "xla")
     try:
         t0 = time.time()
-        if infer:
+        if packed_cell:
+            compiled = uleen_cell.lower_uleen_packed_infer_cell(
+                mesh, backend=backend)
+        elif infer:
             compiled = uleen_cell.lower_uleen_infer_cell(mesh,
                                                          backend=backend)
         else:
@@ -161,7 +173,8 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
-        spec = uleen_cell.ULN_L_SPEC
+        spec = (uleen_cell.ULN_XL_SPEC if packed_cell
+                else uleen_cell.ULN_L_SPEC)
         # "model flops" for a WNN: paper-style op count (hash XORs + k
         # lookups + popcount adds) per sample x batch — no MXU math exists.
         ops_per_inf = sum(
@@ -173,7 +186,7 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
         roof = hlo_cost.roofline_from(compiled.as_text(), cost,
                                       mesh.devices.size, mflops)
         record = {
-            "arch": "uleen-uln-l", "shape": shape,
+            "arch": arch_tag.replace("_", "-"), "shape": shape,
             "kind": "infer" if infer else "train",
             "backend": backend if infer else None,
             "backend_resolved": resolved if infer else None,
@@ -200,7 +213,8 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
               f"{roofs['memory_s']:.3e}/{roofs['collective_s']:.3e} "
               f"dominant={roofs['dominant']}")
     except Exception as e:
-        record = {"arch": "uleen-uln-l", "shape": shape,
+        record = {"arch": arch_tag.replace("_", "-"),
+                  "shape": shape,
                   "kind": "infer" if infer else "train",
                   "backend": backend if infer else None,
                   "backend_resolved": resolved if infer else None,
@@ -251,10 +265,12 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=ARCH_IDS + ["uleen"])
     ap.add_argument("--shape", choices=(list(SHAPES) + ["train_mnist_scale",
-                                                        "infer_mnist_scale"]))
-    ap.add_argument("--backend", choices=["fused", "gather", "auto"],
+                                                        "infer_mnist_scale",
+                                                        "infer_packed_scale"]))
+    ap.add_argument("--backend",
+                    choices=["fused", "gather", "packed", "auto"],
                     default="auto",
-                    help="WNN kernel backend for the uleen infer cell")
+                    help="WNN kernel backend for the uleen infer cells")
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
     ap.add_argument("--all", action="store_true",
@@ -270,7 +286,8 @@ def main(argv=None) -> int:
     else:
         if not (args.arch and args.shape):
             ap.error("--arch and --shape required unless --all")
-        uleen_shapes = ("train_mnist_scale", "infer_mnist_scale")
+        uleen_shapes = ("train_mnist_scale", "infer_mnist_scale",
+                        "infer_packed_scale")
         if (args.arch == "uleen") != (args.shape in uleen_shapes):
             ap.error(f"--arch uleen pairs only with {uleen_shapes} "
                      "(and vice versa)")

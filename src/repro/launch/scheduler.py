@@ -346,6 +346,122 @@ class Engine:
         }
 
 
+@dataclasses.dataclass
+class WnnResult:
+    """One served classification request."""
+    rid: int
+    scores: np.ndarray                 # (M,) int32 ensemble scores
+    pred: int
+    t_submit: float
+    t_done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class WnnBatcher:
+    """Micro-batching serve path for WNN artifact inference — the
+    classification analogue of `Engine` (DESIGN §2 "Packed layout" /
+    §6): requests queue, each `step()` serves up to `slots` of them
+    through ONE fixed-shape scores launch over the artifact's prepared
+    tables.
+
+    The tables are prepared exactly once (`core.export.prepare_artifact`
+    — for the default packed backends that means the uint32 bitplanes go
+    in verbatim, never expanded to int8), and the batch function is
+    compiled exactly once for `(slots, total_bits)`: partial batches pad
+    with zero rows whose outputs are dropped, so admission depth never
+    changes the program. `trace_counts` moves only at trace time, like
+    `Engine.trace_counts`, so tests can assert the steady state compiles
+    nothing.
+
+        batcher = WnnBatcher(artifact, slots=64, backend="auto")
+        rid = batcher.submit(encoded_bits_row)
+        results = batcher.drain()      # -> [WnnResult]
+    """
+
+    def __init__(self, artifact, *, slots: int = 64, backend: str = "auto",
+                 clock: Callable = None):
+        from repro.core import export as export_mod
+        if slots < 1:
+            raise ValueError("need slots >= 1")
+        self.artifact = artifact
+        self.slots = slots
+        self.backend = backend
+        self.total_bits = int(artifact.total_bits)
+        self.clock = clock or time.perf_counter
+        self._prep = export_mod.prepare_artifact(artifact, backend=backend)
+        self.trace_counts: collections.Counter = collections.Counter()
+
+        def _batch_scores(prep, bits):
+            self.trace_counts["batch_scores"] += 1
+            # THE serve loop, shared with artifact_scores — semantics
+            # cannot drift between the one-shot and batch paths
+            return export_mod.scores_from_prep(prep, bits, backend=backend)
+
+        self._scores = jax.jit(_batch_scores)
+        self.queue: collections.deque = collections.deque()
+        self.results: dict = {}
+        self._next_rid = 0
+        self.batches = 0
+        self.served = 0
+
+    def submit(self, bits) -> int:
+        """Queue one encoded input (total_bits,) {0,1}; returns its rid."""
+        bits = np.asarray(bits).reshape(-1)
+        if bits.shape[0] != self.total_bits:
+            raise ValueError(f"request has {bits.shape[0]} bits, artifact "
+                             f"encodes {self.total_bits}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.results[rid] = WnnResult(rid=rid, scores=None, pred=-1,
+                                      t_submit=self.clock())
+        self.queue.append((rid, bits.astype(np.uint8)))
+        return rid
+
+    def step(self) -> int:
+        """Serve up to `slots` queued requests in one fixed-shape launch;
+        returns the number served (0 when idle)."""
+        if not self.queue:
+            return 0
+        take = min(self.slots, len(self.queue))
+        batch = np.zeros((self.slots, self.total_bits), np.uint8)
+        rids = []
+        for i in range(take):
+            rid, bits = self.queue.popleft()
+            batch[i] = bits
+            rids.append(rid)
+        scores = np.asarray(self._scores(self._prep, jnp.asarray(batch)))
+        t = self.clock()
+        for i, rid in enumerate(rids):
+            res = self.results[rid]
+            res.scores = scores[i]
+            res.pred = int(np.argmax(scores[i]))
+            res.t_done = t
+        self.batches += 1
+        self.served += take
+        return take
+
+    def drain(self) -> List[WnnResult]:
+        """Serve until the queue is empty; results in rid order."""
+        while self.queue:
+            self.step()
+        return [self.results[rid] for rid in sorted(self.results)]
+
+    def stats(self) -> dict:
+        done = [r for r in self.results.values() if r.t_done]
+        occupancy = self.served / max(1, self.batches * self.slots)
+        out = {"requests": len(done), "batches": self.batches,
+               "occupancy": occupancy,
+               "traces": int(self.trace_counts["batch_scores"])}
+        if done:
+            lat = sorted(r.latency for r in done)
+            out["latency_p50_s"] = lat[len(lat) // 2]
+            out["latency_max_s"] = lat[-1]
+        return out
+
+
 def synth_request_stream(cfg: ArchConfig, n: int, *, rate: float = 32.0,
                          seed: int = 0, prompt_lens=(8, 16, 24),
                          gen_lens=(4, 8, 16)) -> List[Request]:

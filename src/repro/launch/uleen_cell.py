@@ -34,6 +34,17 @@ ULN_L_SPEC = UleenSpec(
 GLOBAL_BATCH = 131072      # fleet-scale data parallelism
 INFER_BATCH = 65536        # fleet-scale serving batch (binary model)
 
+# ULN-XL: an ensemble past the int8 kernel's VMEM blocking — E up to 2^15
+# means the fused one-hot alone (block_b × block_f × E int8) overflows the
+# 16 MiB VMEM at any useful block, while the packed bitplane kernel holds
+# the same tables in E/8 bytes per filter and blocks comfortably
+# (DESIGN §2 "Packed layout"). 784 px × 8 thermometer bits.
+ULN_XL_SPEC = UleenSpec(
+    num_classes=10, total_bits=784 * 8,
+    submodels=(SubmodelSpec(16, 11), SubmodelSpec(24, 13),
+               SubmodelSpec(32, 15)),
+    bits_per_input=8, dropout_shared_classes=True)
+
 
 def make_uleen_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer):
     def train_step(params, opt_state, statics, bits, labels, rng):
@@ -150,6 +161,66 @@ def lower_uleen_infer_cell(mesh, *, global_batch: int = INFER_BATCH,
             shard["statics"], shard["bits"]))
         lowered = fn.lower(ins["tables"], ins["masks"], ins["bias"],
                            ins["statics"], ins["bits"])
+        return lowered.compile()
+
+
+def make_uleen_packed_infer_step(*, backend: str = "auto"):
+    """Deployed packed-domain inference step (DESIGN §2 "Packed layout").
+
+    The whole model arrives as one `repro.packed.PackedTables` pytree —
+    uint32 bitplanes, masks, perms, H3 parameters, bias — and the step is
+    `packed.packed_scores`: the traced program contains no int8 table and
+    no unpack. backend="packed" pins the bitplane Pallas kernel;
+    "auto" keeps the packed domain but picks the platform formulation.
+    """
+    from repro.packed import runtime
+
+    def infer_step(ptables, bits):
+        return runtime.packed_scores(ptables, bits, backend=backend)
+
+    return infer_step
+
+
+def uleen_packed_infer_specs(spec: UleenSpec, mesh, *,
+                             global_batch: int = INFER_BATCH):
+    """(abstract inputs, shardings) for the packed inference-cell lowering."""
+    from repro.packed import layout
+    rules = sh.SERVE_RULES
+    rep = sh.named_sharding(mesh, rules, ())
+    m = spec.num_classes
+    ptables = layout.PackedTables(
+        words=tuple(jax.ShapeDtypeStruct(
+            (m, spec.num_filters(sm), layout.word_count(sm.entries)),
+            jnp.uint32) for sm in spec.submodels),
+        masks=tuple(jax.ShapeDtypeStruct((m, spec.num_filters(sm)), jnp.int8)
+                    for sm in spec.submodels),
+        perms=tuple(jax.ShapeDtypeStruct(
+            (spec.num_filters(sm), sm.inputs_per_filter), jnp.int32)
+            for sm in spec.submodels),
+        h3s=tuple(jax.ShapeDtypeStruct(
+            (sm.num_hashes, sm.inputs_per_filter), jnp.int32)
+            for sm in spec.submodels),
+        bias=jax.ShapeDtypeStruct((m,), jnp.int32),
+        entries=tuple(sm.entries for sm in spec.submodels),
+        num_classes=m)
+    bits = jax.ShapeDtypeStruct((global_batch, spec.total_bits), jnp.bool_)
+    shardings = dict(
+        ptables=jax.tree.map(lambda _: rep, ptables),
+        bits=sh.named_sharding(mesh, rules, ("batch", None),
+                               shape=bits.shape))
+    return dict(ptables=ptables, bits=bits), shardings
+
+
+def lower_uleen_packed_infer_cell(mesh, *, global_batch: int = INFER_BATCH,
+                                  spec: UleenSpec = ULN_XL_SPEC,
+                                  backend: str = "auto"):
+    """AOT lower + compile the packed-domain inference step on `mesh`."""
+    step = make_uleen_packed_infer_step(backend=backend)
+    ins, shard = uleen_packed_infer_specs(spec, mesh,
+                                          global_batch=global_batch)
+    with sh.use_mesh(mesh, sh.SERVE_RULES):
+        fn = jax.jit(step, in_shardings=(shard["ptables"], shard["bits"]))
+        lowered = fn.lower(ins["ptables"], ins["bits"])
         return lowered.compile()
 
 

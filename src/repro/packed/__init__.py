@@ -1,0 +1,18 @@
+"""Packed-domain inference runtime: uint32 bitplane tables end-to-end.
+
+The deployable artifact bit-packs its Bloom tables (32 entries per uint32
+word); this package makes that layout the *native* serve-time
+representation — `PackedTables` carries the word planes from artifact
+load into the Pallas bitplane kernel (`kernels/packed_wnn.py`) without
+ever materializing an int8 `(M, N_f, E)` table (DESIGN §2 "Packed
+layout").
+"""
+from repro.packed.layout import (PackedTables, from_artifact,
+                                 from_binary_model, pack_words,
+                                 unpack_words, validate_packed_geometry,
+                                 word_count)
+from repro.packed.runtime import packed_scores
+
+__all__ = ["PackedTables", "from_artifact", "from_binary_model",
+           "pack_words", "unpack_words", "validate_packed_geometry",
+           "word_count", "packed_scores"]

@@ -1,0 +1,206 @@
+"""Packed-domain table layout: uint32 bitplanes as the native representation.
+
+ULEEN's accelerator stores ONE BIT per Bloom-filter entry (paper §III-C);
+the on-disk artifact already does (`core/export.py::pack_table`, 32 entries
+per uint32 word). This module makes that layout a first-class *runtime*
+representation: `PackedTables` is a pytree of per-submodel uint32 word
+planes plus the frozen structures needed to serve from them (perm, H3,
+mask, bias), so the packed words flow from artifact load straight into the
+Pallas kernel without ever materializing an int8 `(M, N_f, E)` table.
+
+Word layout (must match `core/export.py::pack_table` exactly):
+
+    entry e of filter (m, f)  ==  bit (e & 31) of word[m, f, e >> 5]
+
+i.e. little-endian bits within a word, words in entry order. `entries`
+that are not a multiple of 32 (E in {8, 16}) pad the single word's high
+bits with zeros; H3 hashes stay in [0, E), so padding bits are never read.
+
+Geometry rules mirror `kernels/ops.py::validate_wnn_geometry` at trace
+time: `entries` must be a power of two (H3 range closure), which makes the
+word count `W = max(1, E // 32)` a power of two as well — a non-power-of-
+two W is rejected, it cannot arise from a legal pack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def word_count(entries: int) -> int:
+    """uint32 words per filter for E entries (>= 1 whole word)."""
+    return max(1, entries // 32) if entries % 32 == 0 else 1
+
+
+def validate_packed_geometry(words: jnp.ndarray, entries: int) -> None:
+    """Trace-time check that a word plane matches its declared entries.
+
+    Raises ValueError for non-power-of-two entries (H3 range closure —
+    same rule as the unpacked path) and for word planes whose trailing
+    dim is not the exact packed width, including any non-power-of-two
+    word count (which no legal `entries` can produce).
+    """
+    if entries <= 0 or entries & (entries - 1):
+        raise ValueError(
+            f"entries={entries} must be a power of two (H3 range closure)")
+    if words.ndim != 3:
+        raise ValueError(f"packed words must be (M, N_f, W), "
+                         f"got {words.shape}")
+    w = words.shape[-1]
+    expect = word_count(entries)
+    if w != expect:
+        raise ValueError(
+            f"packed word count {w} != ceil({entries}/32)={expect} "
+            f"(word-aligned layout; non-power-of-two word counts cannot "
+            f"arise from a legal pack)")
+    if words.dtype != jnp.uint32:
+        raise ValueError(f"packed words must be uint32, got {words.dtype}")
+
+
+def pack_words(table_bin: jnp.ndarray) -> jnp.ndarray:
+    """JAX-side pack: (M, N_f, E) {0,1} -> (M, N_f, W) uint32.
+
+    Bit-identical to `core/export.py::pack_table` (numpy, export-time IO);
+    this one is jit-traceable so training state can be packed on-device.
+    """
+    m, n_f, e = table_bin.shape
+    pad = (-e) % 32
+    bits = table_bin.astype(jnp.uint32)
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, 0), (0, pad)))
+    words = bits.reshape(m, n_f, -1, 32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_words(words: jnp.ndarray, entries: int) -> jnp.ndarray:
+    """JAX-side unpack: (M, N_f, W) uint32 -> (M, N_f, E) int8 {0,1}.
+
+    The round-trip inverse of `pack_words` — used by tests and by
+    explicit down-conversion only; the serve path never calls it.
+    """
+    m, n_f, w = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(m, n_f, w * 32)[..., :entries].astype(jnp.int8)
+
+
+@dataclasses.dataclass
+class PackedTables:
+    """A deployable model in the packed domain — the pytree the serve path
+    carries from artifact load to kernel launch.
+
+    Leaves (per submodel, tuple-indexed): `words` (M, N_f, W) uint32 bit
+    planes, `masks` (M, N_f) int8 survival flags, `perms` (N_f, n) int32
+    input permutations, `h3s` (k, n) int32 hash parameters; plus the
+    ensemble `bias` (M,) int32. `entries` per submodel and `num_classes`
+    are static aux data (they shape the kernel, not the arrays).
+    """
+    words: tuple
+    masks: tuple
+    perms: tuple
+    h3s: tuple
+    bias: jnp.ndarray
+    entries: tuple = ()
+    num_classes: int = 0
+
+    def __post_init__(self):
+        n = len(self.words)
+        if not (len(self.masks) == len(self.perms) == len(self.h3s)
+                == len(self.entries) == n):
+            raise ValueError(
+                f"per-submodel tuples disagree: words={n} "
+                f"masks={len(self.masks)} perms={len(self.perms)} "
+                f"h3s={len(self.h3s)} entries={len(self.entries)}")
+
+    @property
+    def num_submodels(self) -> int:
+        return len(self.words)
+
+    def validate(self) -> None:
+        """Per-submodel geometry validation, mirroring `ops.wnn_scores`'
+        trace-time checks (callable under jit: shapes/dtypes are static)."""
+        for i, (wds, mask, perm, h3, e) in enumerate(zip(
+                self.words, self.masks, self.perms, self.h3s, self.entries)):
+            validate_packed_geometry(jnp.asarray(wds), e)
+            m, n_f, _ = wds.shape
+            if m != self.num_classes:
+                raise ValueError(f"submodel {i}: words M={m} != "
+                                 f"num_classes={self.num_classes}")
+            if mask.shape != (m, n_f):
+                raise ValueError(f"submodel {i}: mask {mask.shape} != "
+                                 f"(M, N_f)=({m}, {n_f})")
+            if perm.ndim != 2 or perm.shape[0] != n_f:
+                raise ValueError(f"submodel {i}: perm {perm.shape} != "
+                                 f"(N_f={n_f}, n)")
+            if h3.ndim != 2 or h3.shape[1] != perm.shape[1]:
+                raise ValueError(f"submodel {i}: h3 {h3.shape} n != "
+                                 f"perm n={perm.shape[1]}")
+        if self.bias.shape != (self.num_classes,):
+            raise ValueError(f"bias {self.bias.shape} != "
+                             f"(M,)=({self.num_classes},)")
+
+    def table_bytes(self) -> int:
+        """Packed table storage in bytes — what the accelerator (and the
+        kernel's VMEM blocks) actually holds: 4 bytes per word."""
+        return sum(int(w.shape[0]) * int(w.shape[1]) * int(w.shape[2]) * 4
+                   for w in self.words)
+
+
+def _flatten(pt: PackedTables):
+    children = (pt.words, pt.masks, pt.perms, pt.h3s, pt.bias)
+    aux = (pt.entries, pt.num_classes)
+    return children, aux
+
+
+def _unflatten(aux, children) -> PackedTables:
+    words, masks, perms, h3s, bias = children
+    entries, num_classes = aux
+    pt = object.__new__(PackedTables)   # skip __post_init__: leaves may be
+    pt.words, pt.masks, pt.perms = words, masks, perms  # tracers/None mid-map
+    pt.h3s, pt.bias = h3s, bias
+    pt.entries, pt.num_classes = entries, num_classes
+    return pt
+
+
+jax.tree_util.register_pytree_node(PackedTables, _flatten, _unflatten)
+
+
+def from_binary_model(statics: Sequence, tables_bin: Sequence,
+                      masks: Sequence, bias, entries: Sequence[int],
+                      num_classes: int) -> PackedTables:
+    """Pack a binarized training-state model (export-time conversion —
+    the one place int8/bool tables legitimately exist)."""
+    return PackedTables(
+        words=tuple(pack_words(jnp.asarray(t).astype(jnp.uint32))
+                    for t in tables_bin),
+        masks=tuple((jnp.asarray(m) != 0).astype(jnp.int8) for m in masks),
+        perms=tuple(jnp.asarray(st.perm, jnp.int32) for st in statics),
+        h3s=tuple(jnp.asarray(st.h3).astype(jnp.int32) for st in statics),
+        bias=jnp.round(jnp.asarray(bias)).astype(jnp.int32),
+        entries=tuple(int(e) for e in entries),
+        num_classes=int(num_classes))
+
+
+def from_artifact(artifact) -> PackedTables:
+    """Lift a `core.export.InferenceArtifact` into the packed runtime —
+    the artifact's uint32 planes become device arrays verbatim; nothing
+    is unpacked.
+    """
+    pt = PackedTables(
+        words=tuple(jnp.asarray(sm.packed, jnp.uint32)
+                    for sm in artifact.submodels),
+        masks=tuple(jnp.asarray(sm.mask).astype(jnp.int8)
+                    for sm in artifact.submodels),
+        perms=tuple(jnp.asarray(sm.perm, jnp.int32)
+                    for sm in artifact.submodels),
+        h3s=tuple(jnp.asarray(sm.h3).astype(jnp.int32)
+                  for sm in artifact.submodels),
+        bias=jnp.asarray(artifact.bias, jnp.int32),
+        entries=tuple(sm.entries for sm in artifact.submodels),
+        num_classes=int(artifact.num_classes))
+    pt.validate()
+    return pt

@@ -1,0 +1,45 @@
+"""Serve entry for the packed domain: PackedTables -> ensemble scores.
+
+The packed analogue of `core/model.py::forward_binary_fused`: one
+`kernels.ops.wnn_scores` dispatch per submodel on the raw thermometer
+tuples, with the tables staying uint32 bitplanes end-to-end — the traced
+program contains no int8 table and no unpack (the acceptance contract of
+DESIGN §2 "Packed layout"). `core/export.py::artifact_scores` and the
+serve engine's WNN batch path (`launch/scheduler.py::WnnBatcher`) both
+route through here.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.packed.layout import PackedTables
+
+
+def packed_scores(pt: PackedTables, bits: jnp.ndarray, *,
+                  backend: str = "auto") -> jnp.ndarray:
+    """bits: (B, total_bits) bool/int {0,1} -> scores (B, M) int32.
+
+    backend="packed" runs the bitplane Pallas kernel per submodel
+    (interpret mode off-TPU); "auto" keeps the packed domain but lets
+    `ops.wnn_scores` pick the platform formulation (kernel on TPU, packed
+    XLA gather oracle on CPU). "fused"/"gather" are rejected — they would
+    need the 32× unpack this runtime exists to avoid; down-convert
+    explicitly via `layout.unpack_words` if that is really wanted.
+    """
+    from repro.kernels import ops  # late import: layout stays pallas-free
+    if backend not in ("packed", "auto"):
+        raise ValueError(
+            f"packed_scores serves the packed domain only (backend="
+            f"'packed'|'auto', got {backend!r}); use core.model."
+            "forward_binary_fused for the unpacked formulations")
+    pt.validate()
+    bits = jnp.asarray(bits)
+    scores = jnp.zeros((bits.shape[0], pt.num_classes), jnp.int32)
+    zero_bias = jnp.zeros((pt.num_classes,), jnp.int32)
+    for words, mask, perm, h3, entries in zip(
+            pt.words, pt.masks, pt.perms, pt.h3s, pt.entries):
+        tuples = bits[:, perm].astype(jnp.int8)          # (B, N_f, n)
+        scores = scores + ops.wnn_scores(
+            tuples, h3, words, mask, zero_bias,
+            backend=backend, entries=entries)
+    return scores + pt.bias[None]

@@ -233,10 +233,12 @@ def test_golden_fused_scores(golden):
     np.testing.assert_array_equal(np.asarray(got), scores)
 
 
-@pytest.mark.parametrize("backend", ["fused", "gather", "auto"])
+@pytest.mark.parametrize("backend", ["fused", "gather", "auto", "packed"])
 def test_golden_export_bitstream_scores(golden, backend):
     """The bit-packed artifact serves the exact golden scores through every
-    backend of `export.artifact_scores`."""
+    backend of `export.artifact_scores` — including the packed-domain
+    runtime ("packed"/"auto"), which never unpacks the artifact's uint32
+    word planes (DESIGN §2 "Packed layout")."""
     art, bits, scores, labels = golden
     got = export.artifact_scores(art, bits, backend=backend)
     np.testing.assert_array_equal(np.asarray(got), scores)

@@ -34,6 +34,26 @@ def test_head_backbone_isolated_by_default(head_cfg):
     assert float(jnp.max(jnp.abs(g))) == 0.0
 
 
+def test_head_backend_dispatch_parity(head_cfg):
+    """The deployed (binarized) head serves identical int32 scores through
+    every WNN backend, and — with an integral bias — the continuous eval
+    forward agrees exactly: ste_step(min) on continuous tables IS the
+    binary AND on their binarization."""
+    state = init_head(jax.random.PRNGKey(0), head_cfg)
+    h = jax.random.normal(jax.random.PRNGKey(1), (6, 32))
+    base = apply_head(head_cfg, state, h)                   # continuous eval
+    deployed = {be: apply_head(head_cfg, state, h, backend=be)
+                for be in ("fused", "gather", "packed", "auto")}
+    ref = np.asarray(deployed["gather"])
+    for be, scores in deployed.items():
+        assert scores.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(scores), ref, err_msg=be)
+    np.testing.assert_array_equal(np.asarray(base), ref.astype(np.float32))
+    with pytest.raises(ValueError, match="backend"):
+        apply_head(head_cfg, state, h, train=True, backend="packed",
+                   rng=jax.random.PRNGKey(2))
+
+
 @pytest.mark.slow
 def test_head_trains_on_separable_features(head_cfg):
     """Pooled states with class structure: the head must learn them."""
