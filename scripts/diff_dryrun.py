@@ -8,13 +8,15 @@ still *compiles* but got materially fatter must also fail. It compares
 the fresh sweep against the previous nightly's uploaded JSON artifacts:
 
     python scripts/diff_dryrun.py results/nightly results/previous \
-        --tol 0.05 --slack-gib 0.01
+        --tol 0.05 --slack-gib 0.01 --md-out "$GITHUB_STEP_SUMMARY"
 
 A cell regresses when  new_peak > old_peak * (1 + tol) + slack  (the
 absolute slack keeps sub-1% noise on tiny cells from tripping the 5%
 gate). Cells present only on one side are reported informationally.
-Exit 0 when the previous directory is missing/empty (first nightly) or
-no cell regresses; 1 otherwise.
+`--md-out` appends the whole comparison as a markdown table (the nightly
+job points it at `$GITHUB_STEP_SUMMARY` so the diff reads off the run
+page without digging through logs). Exit 0 when the previous directory
+is missing/empty (first nightly) or no cell regresses; 1 otherwise.
 """
 from __future__ import annotations
 
@@ -48,6 +50,65 @@ def peak_gib(rec: dict):
     return mem.get("peak_gib")
 
 
+def compare(new: dict, prev: dict, tol: float, slack: float) -> list[dict]:
+    """One row per cell across both sweeps: tag, prev/new peak, status
+    ('ok' | 'regression' | 'new' | 'vanished' | 'skipped')."""
+    rows = []
+    for tag in sorted(set(new) | set(prev)):
+        if tag not in prev:
+            rows.append({"tag": tag, "prev": None, "new": peak_gib(new[tag]),
+                         "status": "new"})
+            continue
+        if tag not in new:
+            rows.append({"tag": tag, "prev": peak_gib(prev[tag]),
+                         "new": None, "status": "vanished"})
+            continue
+        np_, pp = peak_gib(new[tag]), peak_gib(prev[tag])
+        if not (new[tag].get("ok") and prev[tag].get("ok")) \
+                or np_ is None or pp is None:
+            # ok:false already fails the sweep itself
+            rows.append({"tag": tag, "prev": pp, "new": np_,
+                         "status": "skipped"})
+            continue
+        limit = pp * (1.0 + tol) + slack
+        rows.append({"tag": tag, "prev": pp, "new": np_, "limit": limit,
+                     "status": "regression" if np_ > limit else "ok"})
+    return rows
+
+
+_MD_MARK = {"ok": "✅", "regression": "❌ regression", "new": "🆕",
+            "vanished": "⚠️ vanished", "skipped": "–"}
+
+
+def render_markdown(rows: list[dict], tol: float) -> str:
+    """The per-cell diff as a GitHub-flavoured markdown table (the
+    nightly job appends this to $GITHUB_STEP_SUMMARY)."""
+    def gib(v):
+        return "–" if v is None else f"{v:.3f}"
+
+    def delta(r):
+        if r.get("prev") is None or r.get("new") is None or not r["prev"]:
+            return "–"
+        return f"{(r['new'] / r['prev'] - 1) * 100:+.1f}%"
+
+    n_reg = sum(r["status"] == "regression" for r in rows)
+    lines = [
+        "## Nightly dry-run peak-GiB diff",
+        "",
+        (f"{n_reg} regression(s) past +{tol:.0%}" if n_reg
+         else f"All compared cells within +{tol:.0%} of the previous "
+              "nightly."),
+        "",
+        "| cell | prev GiB | new GiB | Δ | status |",
+        "| --- | ---: | ---: | ---: | --- |",
+    ]
+    for r in rows:
+        lines.append(
+            f"| `{r['tag']}` | {gib(r.get('prev'))} | {gib(r.get('new'))} "
+            f"| {delta(r)} | {_MD_MARK[r['status']]} |")
+    return "\n".join(lines) + "\n"
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("new_dir", help="fresh sweep output dir")
@@ -56,6 +117,9 @@ def main(argv=None) -> int:
                     help="relative peak-GiB growth allowed (default 5%%)")
     ap.add_argument("--slack-gib", type=float, default=0.01,
                     help="absolute slack added to the gate")
+    ap.add_argument("--md-out", default=None,
+                    help="append the diff as a markdown table to this file "
+                         "(point at $GITHUB_STEP_SUMMARY in CI)")
     args = ap.parse_args(argv)
 
     new = load_records(args.new_dir)
@@ -66,31 +130,33 @@ def main(argv=None) -> int:
     if not prev:
         print(f"[diff] no previous records under {args.prev_dir} "
               "(first nightly?) — skipping the regression gate")
+        if args.md_out:
+            with open(args.md_out, "a") as f:
+                f.write("## Nightly dry-run peak-GiB diff\n\n"
+                        "No previous nightly to compare against — "
+                        "regression gate skipped.\n")
         return 0
 
-    regressions = []
-    compared = 0
-    for tag in sorted(new):
-        if tag not in prev:
-            print(f"[diff] NEW cell {tag}: "
-                  f"peak={peak_gib(new[tag])} GiB (no baseline)")
-            continue
-        np_, pp = peak_gib(new[tag]), peak_gib(prev[tag])
-        if not (new[tag].get("ok") and prev[tag].get("ok")) \
-                or np_ is None or pp is None:
-            continue   # ok:false already fails the sweep itself
-        compared += 1
-        limit = pp * (1.0 + args.tol) + args.slack_gib
-        marker = ""
-        if np_ > limit:
-            regressions.append(tag)
-            marker = "  <-- REGRESSION"
-        if marker or abs(np_ - pp) > 1e-6:
-            print(f"[diff] {tag}: {pp:.3f} -> {np_:.3f} GiB "
-                  f"(limit {limit:.3f}){marker}")
-    for tag in sorted(set(prev) - set(new)):
-        print(f"[diff] cell {tag} vanished from the sweep "
-              f"(was {peak_gib(prev[tag])} GiB)")
+    rows = compare(new, prev, args.tol, args.slack_gib)
+    regressions = [r["tag"] for r in rows if r["status"] == "regression"]
+    compared = sum(r["status"] in ("ok", "regression") for r in rows)
+    for r in rows:
+        if r["status"] == "new":
+            print(f"[diff] NEW cell {r['tag']}: "
+                  f"peak={r['new']} GiB (no baseline)")
+        elif r["status"] == "vanished":
+            print(f"[diff] cell {r['tag']} vanished from the sweep "
+                  f"(was {r['prev']} GiB)")
+        elif r["status"] == "regression" or (
+                r["status"] == "ok"
+                and abs(r["new"] - r["prev"]) > 1e-6):
+            marker = "  <-- REGRESSION" if r["status"] == "regression" else ""
+            print(f"[diff] {r['tag']}: {r['prev']:.3f} -> {r['new']:.3f} GiB "
+                  f"(limit {r['limit']:.3f}){marker}")
+
+    if args.md_out:
+        with open(args.md_out, "a") as f:
+            f.write(render_markdown(rows, args.tol))
 
     if regressions:
         print(f"[diff] {len(regressions)}/{compared} cells regressed "

@@ -111,7 +111,72 @@ class UnpackedTables(NamedTuple):
     bias: jnp.ndarray  # (M,) int32
 
 
-def prepare_artifact(artifact: InferenceArtifact, *, backend: str = "auto"):
+def prep_shardings(prep, mesh, rules=None):
+    """NamedSharding pytree partitioning prepared tables over `mesh` by
+    class (DESIGN §7) — works for both serve representations.
+
+    Per-class leaves (tables/words, masks, bias) carry the "classes"
+    logical axis on M; the shared perm/H3 structures replicate. The
+    resolver's divisibility sanitizer degrades the whole prep to
+    replication together when M does not divide the mesh axis.
+    """
+    from repro.dist import sharding as sh
+    rules = rules if rules is not None else sh.SERVE_RULES
+    if not isinstance(prep, UnpackedTables):
+        return prep.class_shardings(mesh, rules)   # PackedTables
+
+    def ns(log, x):
+        return sh.named_sharding(mesh, rules, log, shape=tuple(x.shape))
+
+    return UnpackedTables(
+        tables=tuple(ns(("classes", None, None), t) for t in prep.tables),
+        masks=tuple(ns(("classes", None), m) for m in prep.masks),
+        perms=tuple(ns((None, None), p) for p in prep.perms),
+        h3s=tuple(ns((None, None), h) for h in prep.h3s),
+        bias=ns(("classes",), prep.bias))
+
+
+def prep_class_slice(prep, lo: int, hi: int):
+    """The per-class shard [lo, hi) of a prepared-table object — what one
+    device holds under the `classes` partition (manual-sharding oracle of
+    the differential battery; `PackedTables.class_slice` for the packed
+    representation)."""
+    if not isinstance(prep, UnpackedTables):
+        return prep.class_slice(lo, hi)
+    if not 0 <= lo < hi <= prep.bias.shape[0]:
+        raise ValueError(
+            f"class range [{lo}, {hi}) outside [0, {prep.bias.shape[0]})")
+    return UnpackedTables(
+        tables=tuple(t[lo:hi] for t in prep.tables),
+        masks=tuple(m[lo:hi] for m in prep.masks),
+        perms=prep.perms, h3s=prep.h3s, bias=prep.bias[lo:hi])
+
+
+# one prepared object per REPRESENTATION: PackedTables serves both
+# packed-domain backends, one UnpackedTables serves both int8 ones
+_SAME_REPRESENTATION = {"auto": "packed", "packed": "auto",
+                        "fused": "gather", "gather": "fused"}
+
+
+def _build_prep(artifact: InferenceArtifact, backend: str):
+    """The (uncached) representation build behind `prepare_artifact`."""
+    if backend in ("auto", "packed"):
+        from repro import packed
+        return packed.from_artifact(artifact)
+    return UnpackedTables(
+        tables=tuple(jnp.asarray(unpack_table(sm.packed, sm.entries),
+                                 jnp.int8) for sm in artifact.submodels),
+        masks=tuple(jnp.asarray(sm.mask).astype(jnp.int8)
+                    for sm in artifact.submodels),
+        perms=tuple(jnp.asarray(sm.perm, jnp.int32)
+                    for sm in artifact.submodels),
+        h3s=tuple(jnp.asarray(sm.h3).astype(jnp.int32)
+                  for sm in artifact.submodels),
+        bias=jnp.asarray(artifact.bias, jnp.int32))
+
+
+def prepare_artifact(artifact: InferenceArtifact, *, backend: str = "auto",
+                     mesh=None, rules=None):
     """Hoisted, cached table preparation for repeated serving.
 
     backend="packed"/"auto" lifts the artifact's uint32 word planes into a
@@ -120,35 +185,48 @@ def prepare_artifact(artifact: InferenceArtifact, *, backend: str = "auto"):
     is memoized on the artifact instance per backend, so the traced serve
     path (`artifact_scores`, `launch.scheduler.WnnBatcher`) never redoes
     the 32× expansion — or any table work — per batch.
+
+    With `mesh` the prepared tables are additionally device_put class-
+    sharded over it (`prep_shardings`, DESIGN §7): every per-class leaf
+    lands partitioned on M over the mesh's `model` axis, so each device
+    holds M/degree discriminators' tables — the placement the sharded
+    serve path (`WnnBatcher(mesh=...)`) runs against. Memoized per
+    (representation, mesh, rules-content); a replicated prep already in
+    the cache seeds the sharded placement, but a sharded-only server
+    never pins a replicated device copy of its own.
     """
+    from repro.kernels import ops  # late import: export is also numpy-only IO
+    ops.resolve_wnn_backend(backend)     # reject unknown names eagerly
     cache = getattr(artifact, "_prepared", None)
     if cache is None:
         cache = artifact._prepared = {}
+    if mesh is not None:
+        import jax
+        from repro.dist import sharding as sh
+        rules = rules if rules is not None else sh.SERVE_RULES
+        # key on the REPRESENTATION (like the unsharded branch: one
+        # sharded copy serves both same-representation backends) and on
+        # the rules' content, not object identity
+        rules_key = tuple(sorted(
+            (k, tuple(v)) for k, v in rules.rules.items()))
+        key = ("packed" if backend in ("auto", "packed") else "int8",
+               mesh, rules_key)
+        if key in cache:
+            return cache[key]
+        base = cache.get(backend)
+        if base is None:
+            base = cache.get(_SAME_REPRESENTATION[backend])
+        if base is None:
+            base = _build_prep(artifact, backend)   # NOT cached: don't pin
+            #                                         a replicated copy too
+        prep = jax.device_put(base, prep_shardings(base, mesh, rules))
+        cache[key] = prep
+        return prep
     if backend in cache:
         return cache[backend]
-    from repro.kernels import ops  # late import: export is also numpy-only IO
-    ops.resolve_wnn_backend(backend)     # reject unknown names eagerly
-    # one prepared object per REPRESENTATION: PackedTables serves both
-    # packed-domain backends, one UnpackedTables serves both int8 ones
-    packed_domain = backend in ("auto", "packed")
-    other = {"auto": "packed", "packed": "auto",
-             "fused": "gather", "gather": "fused"}[backend]
-    if other in cache:
-        prep = cache[other]
-    elif packed_domain:
-        from repro import packed
-        prep = packed.from_artifact(artifact)
-    else:
-        prep = UnpackedTables(
-            tables=tuple(jnp.asarray(unpack_table(sm.packed, sm.entries),
-                                     jnp.int8) for sm in artifact.submodels),
-            masks=tuple(jnp.asarray(sm.mask).astype(jnp.int8)
-                        for sm in artifact.submodels),
-            perms=tuple(jnp.asarray(sm.perm, jnp.int32)
-                        for sm in artifact.submodels),
-            h3s=tuple(jnp.asarray(sm.h3).astype(jnp.int32)
-                      for sm in artifact.submodels),
-            bias=jnp.asarray(artifact.bias, jnp.int32))
+    prep = cache.get(_SAME_REPRESENTATION[backend])
+    if prep is None:
+        prep = _build_prep(artifact, backend)
     cache[backend] = prep
     return prep
 
@@ -164,6 +242,7 @@ def scores_from_prep(prep, bits: jnp.ndarray, *,
     if not isinstance(prep, UnpackedTables):
         from repro.packed import runtime
         return runtime.packed_scores(prep, bits, backend=backend)
+    from repro.dist import sharding as sh
     from repro.kernels import ops
     m = prep.bias.shape[0]
     scores = jnp.zeros((bits.shape[0], m), jnp.int32)
@@ -171,9 +250,24 @@ def scores_from_prep(prep, bits: jnp.ndarray, *,
     for table, mask, perm, h3 in zip(prep.tables, prep.masks, prep.perms,
                                      prep.h3s):
         tuples = bits[:, perm].astype(jnp.int8)
-        scores = scores + ops.wnn_scores(tuples, h3, table, mask, zero_bias,
-                                         backend=backend)
+        # constrain every partial accumulation HERE, not inside the
+        # jit-cached wnn_scores (its trace must stay mesh-free)
+        scores = sh.logical_constraint(
+            scores + ops.wnn_scores(tuples, h3, table, mask, zero_bias,
+                                    backend=backend),
+            ("batch", "classes"))
     return scores + prep.bias[None]
+
+
+def predict_from_prep(prep, bits: jnp.ndarray, *,
+                      backend: str = "auto"):
+    """(gathered scores (B, M), argmax predictions (B,)) from prepared
+    tables — the class-sharded dataflow's tail for either representation:
+    per-shard partial score columns, then ONE all-gather of the (B, M)
+    matrix, then argmax over the full class axis (DESIGN §7)."""
+    from repro.kernels import ops
+    return ops.ensemble_predict(
+        scores_from_prep(prep, bits, backend=backend))
 
 
 def artifact_scores(artifact: InferenceArtifact, bits: jnp.ndarray, *,

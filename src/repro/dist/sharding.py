@@ -105,16 +105,50 @@ TRAIN_RULES = ShardingRules(rules={
     "tp": ("model",),
     "experts": ("model",),
     "expert_ffn": ("model",),     # only when "experts" could not take it
+    "classes": (),                # WNN discriminators: the continuous
+                                  # training ensemble is tiny — replicate
 })
 
 # Serving: decode works one token at a time, so the KV ring buffer is the
 # long dimension — cache_seq takes `model` and kv_heads stay whole (the
 # decode gather is local; attention reduces over the sharded seq).
+# ULEEN Bloom tables shard over `model` by class ("classes"): per-class
+# discriminators are fully independent until the final argmax (DESIGN §7),
+# so the (M, N_f, E) tables partition on M with zero cross-device traffic
+# until the (B, M) score gather.
 SERVE_RULES = ShardingRules(rules={
     **TRAIN_RULES.rules,
     "kv_heads": (),
     "cache_seq": ("model",),
+    "classes": ("model",),
 })
+
+
+def spec_degree(mesh, entry) -> int:
+    """Shard count one PartitionSpec entry implies on `mesh` (None -> 1)."""
+    if entry is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    degree = 1
+    for ax in axes:
+        degree *= sizes[ax]
+    return degree
+
+
+def class_partition(mesh, num_classes: int,
+                    rules: Optional[ShardingRules] = None):
+    """Resolve the `classes` logical axis for an M-discriminator ensemble.
+
+    Returns `(entry, degree)`: the PartitionSpec entry the class dimension
+    takes on `mesh` and the resulting shard count. Falls back to
+    replication — `(None, 1)` — whenever M does not divide the mesh axis
+    (the divisibility sanitizer), so callers never have to special-case
+    awkward class counts: the resolved spec is always a valid in_sharding.
+    """
+    rules = rules if rules is not None else SERVE_RULES
+    entry = rules.resolve(("classes",), mesh, shape=(num_classes,))[0]
+    return entry, spec_degree(mesh, entry)
 
 
 def strip_axis(rules: ShardingRules, axis: str) -> ShardingRules:

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.dist import sharding as sh
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_tiled
 from repro.kernels.fused_wnn import fused_wnn
@@ -134,6 +135,15 @@ def wnn_scores(tuples, params, table, mask, bias, *, backend: str = "auto",
     All backends are exactly score-equal by contract
     (tests/test_fused_adoption.py + tests/test_packed.py enforce int32
     equality).
+
+    Under class-partitioned tables (DESIGN §7) each device computes only
+    its own class columns — the per-shard partial scores of the sharded
+    serve path. The ("batch", "classes") constraints steering GSPMD live
+    in the (uncached) accumulators `packed.packed_scores` /
+    `export.scores_from_prep`, NOT here: this function is an inner
+    `jax.jit` whose trace cache is keyed on avals only, so it must never
+    capture the thread-local `use_mesh` context (a trace pinned to one
+    mesh's devices would be replayed on the next mesh).
     """
     packed_in = table.dtype == jnp.uint32
     validate_wnn_geometry(tuples, params, table, mask, bias, entries=entries)
@@ -156,6 +166,20 @@ def wnn_scores(tuples, params, table, mask, bias, *, backend: str = "auto",
         return fused_wnn(tuples, params, table, mask, bias,
                          interpret=not _on_tpu())
     return ref.fused_wnn_ref(tuples, params, table, mask, bias)
+
+
+def ensemble_predict(scores):
+    """Gathered (B, M) score matrix + argmax predictions (B,) int32.
+
+    The tail of the class-sharded dataflow (DESIGN §7): partial score
+    columns live sharded as ("batch", "classes"); the argmax needs every
+    class, so the matrix is first constrained to ("batch", None) — under
+    GSPMD that lowers to ONE all-gather of B×M×4 bytes, the only
+    cross-device traffic in the whole serve step (the tables never move).
+    Outside a mesh context both steps are local no-ops.
+    """
+    scores = sh.logical_constraint(scores, ("batch", None))
+    return scores, jnp.argmax(scores, axis=-1).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))

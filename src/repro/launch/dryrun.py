@@ -36,6 +36,10 @@ from repro.launch import hlo_cost, specs, steps
 from repro.launch.mesh import make_production_mesh
 from repro.train import optimizer as opt_lib
 
+# the uleen bonus-cell shapes (run_uleen_cell + CLI validation share this)
+ULEEN_SHAPES = ("train_mnist_scale", "infer_mnist_scale",
+                "infer_packed_scale", "infer_sharded_scale")
+
 
 def lower_cell(cfg, shape, mesh, *, extra_flags: dict | None = None):
     """Build + lower + compile one cell; returns (record, compiled)."""
@@ -134,18 +138,22 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
     the WNN kernel `backend` flag threaded through (DESIGN §2 "Adoption");
     shape="infer_packed_scale" lowers the packed-domain inference step
     (uint32 bitplane tables end-to-end, `repro.packed`) at the ULN-XL
-    geometry the int8 kernel cannot block (DESIGN §2 "Packed layout").
+    geometry the int8 kernel cannot block (DESIGN §2 "Packed layout");
+    shape="infer_sharded_scale" lowers the class-sharded serve step — the
+    ULN-XL ensemble's packed tables partitioned over `model` by class,
+    batch over (pod, data), final argmax over the gathered (B, M) score
+    matrix (DESIGN §7) — and records per-device vs replicated table bytes.
     """
     from repro.launch import uleen_cell
-    uleen_shapes = ("train_mnist_scale", "infer_mnist_scale",
-                    "infer_packed_scale")
-    if shape not in uleen_shapes:
-        raise ValueError(f"uleen cells lower only {uleen_shapes}, "
+    if shape not in ULEEN_SHAPES:
+        raise ValueError(f"uleen cells lower only {ULEEN_SHAPES}, "
                          f"got {shape!r}")
     mesh = make_production_mesh(multi_pod=multi_pod)
     infer = shape != "train_mnist_scale"
     packed_cell = shape == "infer_packed_scale"
-    arch_tag = "uleen_uln_xl" if packed_cell else "uleen_uln_l"
+    sharded_cell = shape == "infer_sharded_scale"
+    arch_tag = ("uleen_uln_xl_ens" if sharded_cell
+                else "uleen_uln_xl" if packed_cell else "uleen_uln_l")
     tag = f"{arch_tag}.{shape}.{'pod2' if multi_pod else 'pod1'}"
     if infer:
         tag += f".{backend}"
@@ -154,15 +162,18 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
     # placeholder CPU mesh — the record must say which, like BENCH_kernel
     # rows do, so backend comparisons aren't read off emulation.
     from repro.kernels import ops as wnn_ops
-    resolved = wnn_ops.resolve_wnn_backend(backend,
-                                           packed_tables=packed_cell)
+    resolved = wnn_ops.resolve_wnn_backend(
+        backend, packed_tables=packed_cell or sharded_cell)
     on_tpu = jax.default_backend() == "tpu"
     kernel_mode = ("mosaic" if resolved in ("fused", "packed") and on_tpu
                    else "interpret" if backend in ("fused", "packed")
                    else "xla")
     try:
         t0 = time.time()
-        if packed_cell:
+        if sharded_cell:
+            compiled = uleen_cell.lower_uleen_sharded_infer_cell(
+                mesh, backend=backend)
+        elif packed_cell:
             compiled = uleen_cell.lower_uleen_packed_infer_cell(
                 mesh, backend=backend)
         elif infer:
@@ -173,7 +184,8 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
-        spec = (uleen_cell.ULN_XL_SPEC if packed_cell
+        spec = (uleen_cell.ULN_XL_ENSEMBLE_SPEC if sharded_cell
+                else uleen_cell.ULN_XL_SPEC if packed_cell
                 else uleen_cell.ULN_L_SPEC)
         # "model flops" for a WNN: paper-style op count (hash XORs + k
         # lookups + popcount adds) per sample x batch — no MXU math exists.
@@ -206,12 +218,57 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
             },
             "roofline": roof.summary(),
         }
+        if sharded_cell:
+            # The point of the cell (DESIGN §7): per-device table bytes
+            # must fall to replicated/degree, degree = the class-shard
+            # count the resolver gives the mesh's `model` axis. Checked
+            # against the MEASURED per-device argument bytes, not just
+            # the resolver's own arithmetic: if the in_shardings ever
+            # regressed to replication, args would carry the full
+            # replicated tables and blow the bound.
+            entry, degree = sh.class_partition(mesh, spec.num_classes,
+                                               sh.SERVE_RULES)
+            rep_bytes = uleen_cell.packed_table_specs(spec).table_bytes()
+            model_axis = sh.spec_degree(mesh, "model")
+            batch_entry = sh.SERVE_RULES.resolve(
+                ("batch",), mesh, shape=(uleen_cell.INFER_BATCH,))[0]
+            bits_bytes = (uleen_cell.INFER_BATCH
+                          // sh.spec_degree(mesh, batch_entry)
+                          * spec.total_bits)
+            record["sharding"] = {
+                "classes": spec.num_classes,
+                "class_axis": entry if entry is None or isinstance(entry, str)
+                else list(entry),
+                "class_shards": degree,
+                "model_axis": model_axis,
+                "table_bytes_replicated": rep_bytes,
+                "table_bytes_per_device": rep_bytes // degree,
+                "args_bytes_per_device_measured":
+                    mem.argument_size_in_bytes,
+            }
+            assert (record["sharding"]["table_bytes_per_device"]
+                    <= rep_bytes // model_axis), (
+                "class sharding fell back to replication on the "
+                "production mesh — the sharded-scale cell must partition")
+            assert mem.argument_size_in_bytes <= (
+                rep_bytes // model_axis + bits_bytes + (4 << 20)), (
+                f"measured args {mem.argument_size_in_bytes} B/device "
+                f"exceed sharded tables ({rep_bytes // model_axis} B) + "
+                f"batch shard ({bits_bytes} B): the in_shardings did not "
+                "actually partition the tables")
         roofs = record["roofline"]
+        shard_note = ""
+        if sharded_cell:
+            s = record["sharding"]
+            shard_note = (f" tables/device={s['table_bytes_per_device'] / 2**20:.2f}"
+                          f" MiB (replicated "
+                          f"{s['table_bytes_replicated'] / 2**20:.2f} MiB, "
+                          f"{s['class_shards']} class shards)")
         print(f"[dryrun] {tag}: OK compile={record['compile_s']}s "
               f"peak={record['memory']['peak_gib']:.2f} GiB/chip "
               f"terms(c/m/coll)={roofs['compute_s']:.3e}/"
               f"{roofs['memory_s']:.3e}/{roofs['collective_s']:.3e} "
-              f"dominant={roofs['dominant']}")
+              f"dominant={roofs['dominant']}{shard_note}")
     except Exception as e:
         record = {"arch": arch_tag.replace("_", "-"),
                   "shape": shape,
@@ -264,9 +321,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=ARCH_IDS + ["uleen"])
-    ap.add_argument("--shape", choices=(list(SHAPES) + ["train_mnist_scale",
-                                                        "infer_mnist_scale",
-                                                        "infer_packed_scale"]))
+    ap.add_argument("--shape", choices=list(SHAPES) + list(ULEEN_SHAPES))
     ap.add_argument("--backend",
                     choices=["fused", "gather", "packed", "auto"],
                     default="auto",
@@ -286,10 +341,8 @@ def main(argv=None) -> int:
     else:
         if not (args.arch and args.shape):
             ap.error("--arch and --shape required unless --all")
-        uleen_shapes = ("train_mnist_scale", "infer_mnist_scale",
-                        "infer_packed_scale")
-        if (args.arch == "uleen") != (args.shape in uleen_shapes):
-            ap.error(f"--arch uleen pairs only with {uleen_shapes} "
+        if (args.arch == "uleen") != (args.shape in ULEEN_SHAPES):
+            ap.error(f"--arch uleen pairs only with {ULEEN_SHAPES} "
                      "(and vice versa)")
         cells = [(args.arch, args.shape)]
 

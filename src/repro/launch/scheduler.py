@@ -376,31 +376,57 @@ class WnnBatcher:
     `Engine.trace_counts`, so tests can assert the steady state compiles
     nothing.
 
+    With `mesh` the batcher serves class-sharded (DESIGN §7): the
+    prepared tables are device_put partitioned over `model` by class
+    (replication fallback when M doesn't divide the axis), each batch is
+    sharded over the mesh's batch axes, and the one compiled launch
+    computes per-shard partial score columns plus the gathered (B, M)
+    argmax. Still exactly one compile — the mesh changes placement, not
+    shapes — and bit-identical int32 scores to the unsharded batcher.
+
         batcher = WnnBatcher(artifact, slots=64, backend="auto")
         rid = batcher.submit(encoded_bits_row)
         results = batcher.drain()      # -> [WnnResult]
     """
 
     def __init__(self, artifact, *, slots: int = 64, backend: str = "auto",
-                 clock: Callable = None):
+                 mesh=None, clock: Callable = None):
         from repro.core import export as export_mod
         if slots < 1:
             raise ValueError("need slots >= 1")
         self.artifact = artifact
         self.slots = slots
         self.backend = backend
+        self.mesh = mesh
+        self.rules = sh.SERVE_RULES
         self.total_bits = int(artifact.total_bits)
         self.clock = clock or time.perf_counter
-        self._prep = export_mod.prepare_artifact(artifact, backend=backend)
+        self._prep = export_mod.prepare_artifact(artifact, backend=backend,
+                                                 mesh=mesh, rules=self.rules)
+        self.class_shards = 1 if mesh is None else sh.class_partition(
+            mesh, int(artifact.num_classes), self.rules)[1]
         self.trace_counts: collections.Counter = collections.Counter()
 
         def _batch_scores(prep, bits):
             self.trace_counts["batch_scores"] += 1
             # THE serve loop, shared with artifact_scores — semantics
-            # cannot drift between the one-shot and batch paths
-            return export_mod.scores_from_prep(prep, bits, backend=backend)
+            # cannot drift between the one-shot and batch paths. The
+            # predict tail gathers the class-sharded partial columns
+            # into the full (B, M) matrix on device (a no-op unsharded).
+            scores, _ = export_mod.predict_from_prep(prep, bits,
+                                                     backend=backend)
+            return scores
 
-        self._scores = jax.jit(_batch_scores)
+        if mesh is None:
+            self._scores = jax.jit(_batch_scores)
+            self._bits_sharding = None
+        else:
+            pshard = export_mod.prep_shardings(self._prep, mesh, self.rules)
+            self._bits_sharding = sh.named_sharding(
+                mesh, self.rules, ("batch", None),
+                shape=(slots, self.total_bits))
+            self._scores = jax.jit(
+                _batch_scores, in_shardings=(pshard, self._bits_sharding))
         self.queue: collections.deque = collections.deque()
         self.results: dict = {}
         self._next_rid = 0
@@ -432,7 +458,13 @@ class WnnBatcher:
             rid, bits = self.queue.popleft()
             batch[i] = bits
             rids.append(rid)
-        scores = np.asarray(self._scores(self._prep, jnp.asarray(batch)))
+        if self.mesh is None:
+            scores = np.asarray(self._scores(self._prep, jnp.asarray(batch)))
+        else:
+            with sh.use_mesh(self.mesh, self.rules):
+                scores = np.asarray(self._scores(
+                    self._prep,
+                    jax.device_put(batch, self._bits_sharding)))
         t = self.clock()
         for i, rid in enumerate(rids):
             res = self.results[rid]
@@ -453,6 +485,9 @@ class WnnBatcher:
         done = [r for r in self.results.values() if r.t_done]
         occupancy = self.served / max(1, self.batches * self.slots)
         out = {"requests": len(done), "batches": self.batches,
+               "submitted": self._next_rid, "served": self.served,
+               "queued": len(self.queue),
+               "class_shards": self.class_shards,
                "occupancy": occupancy,
                "traces": int(self.trace_counts["batch_scores"])}
         if done:

@@ -45,6 +45,19 @@ ULN_XL_SPEC = UleenSpec(
                SubmodelSpec(32, 15)),
     bits_per_input=8, dropout_shared_classes=True)
 
+# ULN-XL ensemble: the class-sharded serving target (DESIGN §7) — the XL
+# geometry grown to a 32-way label space (a multi-task edge deployment:
+# several datasets' discriminators served as one ensemble, the scaling
+# regime BTHOWeN/DWN motivate). Replicating its packed tables costs
+# ~36 MiB per device; sharded over `model` by class each device holds
+# M/16 discriminators' tables and the only cross-device traffic is the
+# final (B, M) score gather.
+ULN_XL_ENSEMBLE_SPEC = UleenSpec(
+    num_classes=32, total_bits=784 * 8,
+    submodels=(SubmodelSpec(16, 11), SubmodelSpec(24, 13),
+               SubmodelSpec(32, 15)),
+    bits_per_input=8, dropout_shared_classes=True)
+
 
 def make_uleen_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer):
     def train_step(params, opt_state, statics, bits, labels, rng):
@@ -181,14 +194,12 @@ def make_uleen_packed_infer_step(*, backend: str = "auto"):
     return infer_step
 
 
-def uleen_packed_infer_specs(spec: UleenSpec, mesh, *,
-                             global_batch: int = INFER_BATCH):
-    """(abstract inputs, shardings) for the packed inference-cell lowering."""
+def packed_table_specs(spec: UleenSpec):
+    """Abstract `PackedTables` (ShapeDtypeStructs) for a geometry — the
+    deployable model the packed/sharded inference cells lower against."""
     from repro.packed import layout
-    rules = sh.SERVE_RULES
-    rep = sh.named_sharding(mesh, rules, ())
     m = spec.num_classes
-    ptables = layout.PackedTables(
+    return layout.PackedTables(
         words=tuple(jax.ShapeDtypeStruct(
             (m, spec.num_filters(sm), layout.word_count(sm.entries)),
             jnp.uint32) for sm in spec.submodels),
@@ -203,6 +214,14 @@ def uleen_packed_infer_specs(spec: UleenSpec, mesh, *,
         bias=jax.ShapeDtypeStruct((m,), jnp.int32),
         entries=tuple(sm.entries for sm in spec.submodels),
         num_classes=m)
+
+
+def uleen_packed_infer_specs(spec: UleenSpec, mesh, *,
+                             global_batch: int = INFER_BATCH):
+    """(abstract inputs, shardings) for the packed inference-cell lowering."""
+    rules = sh.SERVE_RULES
+    rep = sh.named_sharding(mesh, rules, ())
+    ptables = packed_table_specs(spec)
     bits = jax.ShapeDtypeStruct((global_batch, spec.total_bits), jnp.bool_)
     shardings = dict(
         ptables=jax.tree.map(lambda _: rep, ptables),
@@ -218,6 +237,55 @@ def lower_uleen_packed_infer_cell(mesh, *, global_batch: int = INFER_BATCH,
     step = make_uleen_packed_infer_step(backend=backend)
     ins, shard = uleen_packed_infer_specs(spec, mesh,
                                           global_batch=global_batch)
+    with sh.use_mesh(mesh, sh.SERVE_RULES):
+        fn = jax.jit(step, in_shardings=(shard["ptables"], shard["bits"]))
+        lowered = fn.lower(ins["ptables"], ins["bits"])
+        return lowered.compile()
+
+
+def make_uleen_sharded_infer_step(*, backend: str = "auto"):
+    """Class-sharded packed inference step (DESIGN §7).
+
+    `packed.packed_predict`: per-device partial score columns over the
+    class-partitioned bitplane tables, one (B, M) score gather, argmax.
+    Returns (scores, predictions) — the serve path's full answer.
+    """
+    from repro.packed import runtime
+
+    def infer_step(ptables, bits):
+        return runtime.packed_predict(ptables, bits, backend=backend)
+
+    return infer_step
+
+
+def uleen_sharded_infer_specs(spec: UleenSpec, mesh, *,
+                              global_batch: int = INFER_BATCH):
+    """(abstract inputs, shardings) for the class-sharded inference cell:
+    tables partitioned over `model` by class, batch over (pod, data)."""
+    rules = sh.SERVE_RULES
+    ptables = packed_table_specs(spec)
+    bits = jax.ShapeDtypeStruct((global_batch, spec.total_bits), jnp.bool_)
+    shardings = dict(
+        ptables=ptables.class_shardings(mesh, rules),
+        bits=sh.named_sharding(mesh, rules, ("batch", None),
+                               shape=bits.shape))
+    return dict(ptables=ptables, bits=bits), shardings
+
+
+def lower_uleen_sharded_infer_cell(mesh, *, global_batch: int = INFER_BATCH,
+                                   spec: UleenSpec = ULN_XL_ENSEMBLE_SPEC,
+                                   backend: str = "auto"):
+    """AOT lower + compile the class-sharded inference step on `mesh`.
+
+    The scaling configuration the ROADMAP calls for once geometries
+    outgrow MNIST: per-device table bytes fall to replicated/degree
+    (degree = the `model`-axis shard count `dist.sharding.class_partition`
+    reports), and serve throughput scales with the `data` axis instead of
+    being capped by single-device VMEM/HBM.
+    """
+    step = make_uleen_sharded_infer_step(backend=backend)
+    ins, shard = uleen_sharded_infer_specs(spec, mesh,
+                                           global_batch=global_batch)
     with sh.use_mesh(mesh, sh.SERVE_RULES):
         fn = jax.jit(step, in_shardings=(shard["ptables"], shard["bits"]))
         lowered = fn.lower(ins["ptables"], ins["bits"])

@@ -149,6 +149,58 @@ class PackedTables:
         return sum(int(w.shape[0]) * int(w.shape[1]) * int(w.shape[2]) * 4
                    for w in self.words)
 
+    def logical_axes(self):
+        """Parallel PackedTables of logical-axis tuples (DESIGN §7).
+
+        Per-class discriminators are independent until the final argmax,
+        so every per-class leaf (words, masks, bias) carries "classes" on
+        its M dimension; the shared structures (perm, H3 — the paper's
+        central hash block, one copy serves every discriminator) stay
+        replicated. Works on concrete tables and ShapeDtypeStruct specs
+        alike.
+        """
+        return PackedTables(
+            words=tuple(("classes", None, None) for _ in self.words),
+            masks=tuple(("classes", None) for _ in self.masks),
+            perms=tuple((None, None) for _ in self.perms),
+            h3s=tuple((None, None) for _ in self.h3s),
+            bias=("classes",),
+            entries=self.entries, num_classes=self.num_classes)
+
+    def class_shardings(self, mesh, rules):
+        """NamedSharding pytree partitioning the tables over `mesh` by
+        class — the in_shardings of the sharded serve path. The resolver's
+        divisibility sanitizer degrades every leaf to replication together
+        when M does not divide the mesh axis (DESIGN §7)."""
+        from repro.dist import sharding as sh   # keep layout jax.sharding-free
+        axes = self.logical_axes()
+
+        def ns(log, x):
+            return sh.named_sharding(mesh, rules, log, shape=tuple(x.shape))
+
+        return PackedTables(
+            words=tuple(ns(a, w) for a, w in zip(axes.words, self.words)),
+            masks=tuple(ns(a, m) for a, m in zip(axes.masks, self.masks)),
+            perms=tuple(ns(a, p) for a, p in zip(axes.perms, self.perms)),
+            h3s=tuple(ns(a, h) for a, h in zip(axes.h3s, self.h3s)),
+            bias=ns(axes.bias, self.bias),
+            entries=self.entries, num_classes=self.num_classes)
+
+    def class_slice(self, lo: int, hi: int) -> "PackedTables":
+        """The per-class table shard [lo, hi) — what one device holds
+        under the `classes` partition: words/masks/bias slice on M, the
+        shared perm/H3 structures come along whole. Scoring a slice gives
+        that shard's partial (B, hi-lo) score columns of the full (B, M)
+        matrix (the differential battery's manual-sharding oracle)."""
+        if not 0 <= lo < hi <= self.num_classes:
+            raise ValueError(
+                f"class range [{lo}, {hi}) outside [0, {self.num_classes})")
+        return PackedTables(
+            words=tuple(w[lo:hi] for w in self.words),
+            masks=tuple(m[lo:hi] for m in self.masks),
+            perms=self.perms, h3s=self.h3s, bias=self.bias[lo:hi],
+            entries=self.entries, num_classes=hi - lo)
+
 
 def _flatten(pt: PackedTables):
     children = (pt.words, pt.masks, pt.perms, pt.h3s, pt.bias)

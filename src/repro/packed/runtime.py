@@ -7,11 +7,19 @@ program contains no int8 table and no unpack (the acceptance contract of
 DESIGN §2 "Packed layout"). `core/export.py::artifact_scores` and the
 serve engine's WNN batch path (`launch/scheduler.py::WnnBatcher`) both
 route through here.
+
+Under an active `dist.sharding.use_mesh` context the score matrix is
+constrained to the ("batch", "classes") logical sharding, so tables
+partitioned over `model` by class (DESIGN §7) score their own class
+columns locally; `packed_predict` gathers the (B, M) matrix and takes the
+final argmax — the one cross-device step of the class-sharded dataflow.
+Outside a mesh context every constraint is a no-op.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.dist import sharding as sh
 from repro.packed.layout import PackedTables
 
 
@@ -25,6 +33,10 @@ def packed_scores(pt: PackedTables, bits: jnp.ndarray, *,
     XLA gather oracle on CPU). "fused"/"gather" are rejected — they would
     need the 32× unpack this runtime exists to avoid; down-convert
     explicitly via `layout.unpack_words` if that is really wanted.
+
+    The returned matrix keeps the ("batch", "classes") partial-score
+    sharding inside a mesh context — callers that need the gathered
+    matrix (or the prediction) go through `packed_predict`.
     """
     from repro.kernels import ops  # late import: layout stays pallas-free
     if backend not in ("packed", "auto"):
@@ -39,7 +51,25 @@ def packed_scores(pt: PackedTables, bits: jnp.ndarray, *,
     for words, mask, perm, h3, entries in zip(
             pt.words, pt.masks, pt.perms, pt.h3s, pt.entries):
         tuples = bits[:, perm].astype(jnp.int8)          # (B, N_f, n)
-        scores = scores + ops.wnn_scores(
-            tuples, h3, words, mask, zero_bias,
-            backend=backend, entries=entries)
+        # constrain every partial accumulation HERE, not inside the
+        # jit-cached wnn_scores (its trace must stay mesh-free)
+        scores = sh.logical_constraint(
+            scores + ops.wnn_scores(tuples, h3, words, mask, zero_bias,
+                                    backend=backend, entries=entries),
+            ("batch", "classes"))
     return scores + pt.bias[None]
+
+
+def packed_predict(pt: PackedTables, bits: jnp.ndarray, *,
+                   backend: str = "auto"):
+    """(gathered scores (B, M) int32, argmax predictions (B,) int32).
+
+    The class-sharded serve dataflow's tail (DESIGN §7): per-shard
+    partial score columns -> one all-gather of the (B, M) matrix (the
+    only cross-device traffic, B×M×4 bytes — the tables never move) ->
+    argmax over the full class axis. int32 addition is associative, so
+    the gathered scores are bit-identical to the replicated path's.
+    """
+    scores = packed_scores(pt, bits, backend=backend)
+    from repro.kernels import ops
+    return ops.ensemble_predict(scores)

@@ -1,3 +1,16 @@
+import os
+
+# The class-sharded serving battery (tests/test_sharded_serving.py,
+# DESIGN §7) runs on a REAL multi-device mesh — 8 forced host-platform
+# devices, meshed (data=2, model=4). Must be set before jax initialises
+# (conftest imports first in a pytest run); an explicit XLA_FLAGS from
+# the environment (e.g. CI) wins.
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
 import jax
 import jax.numpy as jnp
 import pytest

@@ -1,5 +1,6 @@
 """Resolver edge cases beyond the seed contract, plus a host-mesh lowering
-smoke test for the ULEEN production cell."""
+smoke test for the ULEEN production cell and the `classes`-axis property
+battery (DESIGN §7)."""
 import types
 
 import jax
@@ -7,6 +8,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # minimal containers: seeded deterministic shim
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
 
 from repro.dist import sharding as sh
 from repro.launch.mesh import make_host_mesh
@@ -91,6 +99,109 @@ def test_use_mesh_restores_outer_context():
         with sh.use_mesh(mesh, sh.SERVE_RULES):
             assert sh.current_context()[1] is sh.SERVE_RULES
         assert sh.current_context()[1] is sh.TRAIN_RULES
+
+
+# ---------------------------------------------------------------------------
+# `classes` axis property battery (DESIGN §7): resolve never produces an
+# invalid PartitionSpec, whatever the mesh/class-count combination.
+# ---------------------------------------------------------------------------
+
+def _assert_valid_spec(spec, mesh, shape):
+    """The three resolver invariants every resolved spec must satisfy:
+    only real >1-size mesh axes, no axis named twice (no-reuse), and the
+    cumulative device count dividing each dim (sanitizer)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = []
+    for entry, dim in zip(tuple(spec), shape):
+        axes = (() if entry is None
+                else (entry,) if isinstance(entry, str) else tuple(entry))
+        degree = 1
+        for ax in axes:
+            assert ax in sizes, f"spec names unknown mesh axis {ax!r}"
+            assert sizes[ax] > 1, f"size-1 axis {ax!r} leaked into spec"
+            used.append(ax)
+            degree *= sizes[ax]
+        assert dim % degree == 0, (
+            f"dim {dim} not divisible by shard degree {degree}")
+    assert len(used) == len(set(used)), f"axis reused across dims: {used}"
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(1, 8),              # data axis size
+       st.integers(1, 8),              # model axis size
+       st.integers(1, 48),             # num_classes M
+       st.integers(1, 64))             # batch B
+def test_classes_axis_never_produces_invalid_spec(data, model, m, b):
+    """Divisibility sanitizer: `classes` takes `model` iff it divides M;
+    the resolved ("batch", "classes")-style specs are always valid, and
+    `class_partition` agrees with the resolver."""
+    mesh = _fake_mesh((data, model), ("data", "model"))
+    for logical, shape in ((("classes",), (m,)),
+                           (("batch", "classes"), (b, m)),
+                           (("classes", None, None), (m, 7, 13))):
+        spec = sh.SERVE_RULES.resolve(logical, mesh, shape=shape)
+        _assert_valid_spec(spec, mesh, shape)
+    entry, degree = sh.class_partition(mesh, m)
+    if model > 1 and m % model == 0:
+        assert entry == "model" and degree == model
+    else:
+        assert entry is None and degree == 1
+    assert sh.spec_degree(mesh, entry) == degree
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(1, 4),              # pod
+       st.integers(1, 8),              # data
+       st.integers(1, 8),              # model
+       st.integers(1, 48))             # M
+def test_classes_multi_axis_subset_fallback(pod, data, model, m):
+    """A multi-axis `classes` rule degrades left-to-right like any other:
+    axes are taken only while the cumulative count divides M, and the
+    result is always a valid spec."""
+    rules = sh.ShardingRules(rules={**sh.SERVE_RULES.rules,
+                                    "classes": ("model", "data")})
+    mesh = _fake_mesh((pod, data, model), ("pod", "data", "model"))
+    spec = rules.resolve(("classes",), mesh, shape=(m,))
+    _assert_valid_spec(spec, mesh, (m,))
+    # left-to-right: "data" may appear only if "model" was taken first
+    # (or model was skippable: size 1 or non-dividing)
+    entry = spec[0]
+    axes = (() if entry is None
+            else (entry,) if isinstance(entry, str) else tuple(entry))
+    if "data" in axes and "model" in axes:
+        assert axes == ("model", "data")
+        assert m % (model * data) == 0
+    elif axes == ("model",):
+        assert m % model == 0
+    elif axes == ("data",):
+        assert m % data == 0 and (model == 1 or m % model)
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(1, 8),              # data
+       st.integers(1, 8),              # model
+       st.integers(1, 48),             # M
+       st.integers(1, 64))             # cache length
+def test_classes_no_axis_reuse_with_cache_seq(data, model, m, c):
+    """`classes` and `cache_seq` both prefer `model` under SERVE_RULES —
+    whichever dim resolves first consumes it, the other degrades to
+    replication, and the spec never names `model` twice."""
+    mesh = _fake_mesh((data, model), ("data", "model"))
+    for logical, shape in ((("classes", "cache_seq"), (m, c)),
+                           (("cache_seq", "classes"), (c, m))):
+        spec = sh.SERVE_RULES.resolve(logical, mesh, shape=shape)
+        _assert_valid_spec(spec, mesh, shape)
+        entries = [e for e in tuple(spec) if e is not None]
+        assert len(entries) <= 1 or entries[0] != entries[1]
+
+
+def test_train_rules_replicate_classes():
+    """Training keeps the continuous ensemble replicated: the `classes`
+    axis exists (so shared model code resolves) but takes no mesh axis."""
+    mesh = _fake_mesh((4, 4))
+    assert sh.TRAIN_RULES.resolve(("classes",), mesh, shape=(8,)) == P(None)
+    assert sh.SERVE_RULES.resolve(("classes",), mesh, shape=(8,)) == \
+        P("model")
 
 
 def test_uleen_cell_lowers_on_host_mesh():
