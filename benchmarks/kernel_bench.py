@@ -38,11 +38,17 @@ from benchmarks.common import emit, timeit
 from benchmarks.model_zoo import ZOO
 from repro.kernels import fused_wnn, ops, packed_wnn, ref
 
-SCHEMA = "kernel_bench/v2"
-ROW_KEYS = ("model", "submodel", "backend", "mode", "b", "n_f", "n", "m",
-            "entries", "k", "wall_us", "vmem_kib", "fused_fits_vmem")
+SCHEMA = "kernel_bench/v3"
+# v3: every row carries `interpret` (bool) and `platform` (the jax
+# backend that actually ran it) so interpret-mode-on-CPU Pallas numbers
+# can never be silently compared against real-hardware rows.
+ROW_KEYS = ("model", "submodel", "backend", "mode", "interpret", "platform",
+            "b", "n_f", "n", "m", "entries", "k", "wall_us", "vmem_kib",
+            "fused_fits_vmem")
 FEATURES = 256               # benchmark task: 16x16 synthetic MNIST-like
-VMEM_LIMIT = 16 * 2 ** 20    # per-core VMEM on the TPU target
+# per-core VMEM on the TPU target — the same hard limit the kernels'
+# `vmem_plan` and the wnnlint vmem-budget rule evaluate against
+VMEM_LIMIT = fused_wnn.VMEM_LIMIT
 
 # ULN-XL stress geometry (launch/uleen_cell.py::ULN_XL_SPEC, largest
 # submodel): E = 2^15 overflows the fused kernel's VMEM blocking — only
@@ -99,7 +105,9 @@ def bench_geometry(model: str, sm_idx: int, n_f: int, n: int, e: int, *,
         mode = ("tpu" if on_tpu else
                 "interpret" if backend in ("fused", "packed") else "xla-cpu")
         rows.append(dict(model=model, submodel=sm_idx, backend=backend,
-                         mode=mode, b=b, n_f=n_f, n=n, m=m, entries=e, k=k,
+                         mode=mode, interpret=mode == "interpret",
+                         platform=jax.default_backend(),
+                         b=b, n_f=n_f, n=n, m=m, entries=e, k=k,
                          wall_us=round(us, 1),
                          vmem_kib=round(vmem[backend], 1),
                          fused_fits_vmem=fits))
@@ -186,6 +194,16 @@ def check(path: str) -> int:
         if not (isinstance(row["wall_us"], (int, float))
                 and row["wall_us"] > 0):
             print(f"[check] {path}: row {i} wall_us={row['wall_us']!r}")
+            return 1
+        if not isinstance(row["interpret"], bool):
+            print(f"[check] {path}: row {i} interpret="
+                  f"{row['interpret']!r} (must be bool)")
+            return 1
+        if row["interpret"] != (row["mode"] == "interpret") \
+                or (row["interpret"] and row["platform"] == "tpu"):
+            print(f"[check] {path}: row {i} inconsistent provenance: "
+                  f"mode={row['mode']!r} interpret={row['interpret']!r} "
+                  f"platform={row['platform']!r}")
             return 1
         g = (row["model"], row["submodel"])
         backends_seen.setdefault(g, set()).add(row["backend"])

@@ -50,6 +50,67 @@ def peak_gib(rec: dict):
     return mem.get("peak_gib")
 
 
+def load_analysis(root: str) -> dict:
+    """cell tag -> {errors, warnings} from the sweep's ANALYSIS.json
+    (written by `dryrun --analyze`; recursing for artifact subdirs).
+    Empty when the sweep ran without --analyze."""
+    rootp = pathlib.Path(root)
+    if not rootp.exists():
+        return {}
+    for path in sorted(rootp.rglob("ANALYSIS.json")):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            print(f"[diff] skipping unreadable {path}")
+            continue
+        if isinstance(doc, dict) and str(doc.get("schema", "")).startswith(
+                "wnnlint/"):
+            return {tag: {"errors": c.get("errors", 0),
+                          "warnings": c.get("warnings", 0)}
+                    for tag, c in (doc.get("cells") or {}).items()}
+    return {}
+
+
+def compare_analysis(new: dict, prev: dict) -> list[dict]:
+    """One row per analyzed cell: finding counts on both sides; status
+    'regression' when the error count grew."""
+    rows = []
+    for tag in sorted(set(new) | set(prev)):
+        n, p = new.get(tag), prev.get(tag)
+        if p is None or n is None:
+            rows.append({"tag": tag, "prev": p, "new": n,
+                         "status": "new" if p is None else "vanished"})
+            continue
+        rows.append({"tag": tag, "prev": p, "new": n,
+                     "status": "regression"
+                     if n["errors"] > p["errors"] else "ok"})
+    return rows
+
+
+def render_analysis_markdown(rows: list[dict]) -> str:
+    """Finding-count diff as a markdown table for $GITHUB_STEP_SUMMARY."""
+    def cnt(c):
+        return "–" if c is None else f"{c['errors']}E/{c['warnings']}W"
+
+    n_reg = sum(r["status"] == "regression" for r in rows)
+    lines = [
+        "## Nightly wnnlint finding-count diff",
+        "",
+        (f"{n_reg} cell(s) with MORE error findings than the previous "
+         "nightly" if n_reg
+         else "No cell gained error-severity findings since the previous "
+              "nightly."),
+        "",
+        "| cell | prev findings | new findings | status |",
+        "| --- | ---: | ---: | --- |",
+    ]
+    for r in rows:
+        lines.append(f"| `{r['tag']}` | {cnt(r['prev'])} | {cnt(r['new'])} "
+                     f"| {_MD_MARK[r['status']]} |")
+    return "\n".join(lines) + "\n"
+
+
 def compare(new: dict, prev: dict, tol: float, slack: float) -> list[dict]:
     """One row per cell across both sweeps: tag, prev/new peak, status
     ('ok' | 'regression' | 'new' | 'vanished' | 'skipped')."""
@@ -157,6 +218,23 @@ def main(argv=None) -> int:
     if args.md_out:
         with open(args.md_out, "a") as f:
             f.write(render_markdown(rows, args.tol))
+
+    # wnnlint finding counts (informational for warnings; error-count
+    # growth fails like a peak regression — new errors already failed
+    # the sweep itself, this catches them surviving via a stale baseline)
+    new_an, prev_an = load_analysis(args.new_dir), load_analysis(
+        args.prev_dir)
+    if new_an or prev_an:
+        an_rows = compare_analysis(new_an, prev_an)
+        for r in an_rows:
+            if r["status"] == "regression":
+                print(f"[diff] {r['tag']}: wnnlint errors "
+                      f"{r['prev']['errors']} -> {r['new']['errors']}"
+                      "  <-- REGRESSION")
+                regressions.append(r["tag"])
+        if args.md_out:
+            with open(args.md_out, "a") as f:
+                f.write("\n" + render_analysis_markdown(an_rows))
 
     if regressions:
         print(f"[diff] {len(regressions)}/{compared} cells regressed "

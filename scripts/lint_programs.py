@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""Thin launcher for the wnnlint CLI (`repro.analysis.cli`).
+
+    PYTHONPATH=src python scripts/lint_programs.py --json ANALYSIS.json
+
+Lints the uleen cells on the host's devices; see the module docstring of
+`repro/analysis/cli.py` for the mesh/batch defaults. Exit 1 on any
+error-severity finding — the CI fast job runs this on the forced
+8-device mesh.
+"""
+import sys
+
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,23 @@
+"""`wnnlint`: static program-invariant checks over lowered cells.
+
+The invariants earlier PRs established one-off — no unpacked table in a
+packed-path trace, no f64, one score gather on the sharded serve cell,
+VMEM-safe kernel blocks — as a registry of named rules evaluated against
+jaxprs and post-optimization HLO (DESIGN §8). Entry points:
+`launch/dryrun.py --analyze`, `python -m repro.analysis.cli`, and
+`scripts/lint_programs.py`.
+"""
+from repro.analysis.jaxpr_walk import (all_avals, all_eqns, all_jaxprs,
+                                       aval_shapes, find_avals,
+                                       primitive_names, sub_jaxprs)
+from repro.analysis.registry import (RULES, CellProgram, Finding,
+                                     KernelGeometry, Rule, analyze_program,
+                                     render_findings, report_json,
+                                     summarize)
+
+__all__ = [
+    "all_avals", "all_eqns", "all_jaxprs", "aval_shapes", "find_avals",
+    "primitive_names", "sub_jaxprs",
+    "RULES", "CellProgram", "Finding", "KernelGeometry", "Rule",
+    "analyze_program", "render_findings", "report_json", "summarize",
+]

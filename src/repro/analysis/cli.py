@@ -1,0 +1,70 @@
+"""Standalone lint entry: check the uleen cells on the host's devices.
+
+    PYTHONPATH=src python -m repro.analysis.cli --json ANALYSIS.json
+
+Lowers each requested cell on a mesh built from whatever devices exist
+(the CI fast job forces 8 host devices, giving a real (data=2, model=4)
+mesh so the class-sharded rules have something to check; on 1 device the
+sharded-only rules simply don't apply) at a reduced default batch —
+rule verdicts don't depend on batch, and the full serve batch only slows
+the compile down. `launch/dryrun.py --analyze` runs the same rules at
+production scale. Exit 1 on any error-severity finding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import cells, registry
+from repro.launch.mesh import make_mesh
+
+LINT_BATCH = 8192   # divisible by every (pod, data) split the rules pick
+
+
+def lint_mesh():
+    """(data=2, model=n/2) over the available devices — the test/CI mesh
+    shape — degrading to the 1-device no-op mesh."""
+    import jax
+    n = len(jax.devices())
+    if n >= 4 and n % 2 == 0:
+        return make_mesh((2, n // 2), ("data", "model"))
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shape", action="append",
+                    choices=list(cells.ULEEN_CELLS),
+                    help="cell shape(s) to lint (default: all)")
+    ap.add_argument("--backend", default="auto",
+                    choices=["fused", "gather", "packed", "auto"])
+    ap.add_argument("--batch", type=int, default=LINT_BATCH)
+    ap.add_argument("--json", default=None,
+                    help="write the ANALYSIS.json document here")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print info-severity findings")
+    args = ap.parse_args(argv)
+
+    mesh = lint_mesh()
+    shapes = args.shape or list(cells.ULEEN_CELLS)
+    per_cell = {}
+    for shape in shapes:
+        prog = cells.uleen_cell_program(shape, mesh,
+                                        global_batch=args.batch,
+                                        backend=args.backend)
+        per_cell[prog.name] = registry.analyze_program(prog)
+
+    print(registry.render_findings(per_cell, verbose=args.verbose))
+    if args.json:
+        doc = registry.report_json(
+            {tag: registry.summarize(fs) for tag, fs in per_cell.items()})
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"[wnnlint] wrote {args.json}")
+    errors = sum(registry.count(fs, "error") for fs in per_cell.values())
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

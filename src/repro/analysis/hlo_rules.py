@@ -1,0 +1,164 @@
+"""HLO-side program facts for the invariant rules (DESIGN §8).
+
+Everything here is derived from `compiled.as_text()` — the
+post-optimization, SPMD-partitioned module whose shapes are *per-device*
+— through the parsers the roofline already trusts
+(`launch/hlo_cost.py::parse_collectives`, `launch/hlo_analysis.py::
+parse_module`). No new HLO grammar: the lint rules and the cost model
+read the exact same instruction stream.
+
+Two SPMD facts shape the rule implementations:
+
+* collectives appear as explicit instructions (`all-gather`,
+  `all-reduce`, ...), so a traffic budget is an instruction count +
+  shape check;
+* sharding annotations survive only on the ENTRY computation's
+  parameters (interior annotations are consumed by the partitioner), so
+  "coverage" is checked there, with a per-device size ceiling standing
+  in for the interior: an intermediate that lost its sharding shows up
+  as a per-device array at global size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.launch import hlo_analysis, hlo_cost
+
+# custom-call targets that round-trip through the host Python runtime
+# (jax.pure_callback / io_callback / debug.callback), plus raw infeed /
+# outfeed / host transfers — none may appear in a serving program.
+HOST_CALLBACK_TARGETS = (
+    "xla_python_cpu_callback",
+    "xla_python_gpu_callback",
+    "xla_ffi_python_cpu_callback",
+    "xla_ffi_python_gpu_callback",
+    "xla_ffi_partitioned_python_cpu_callback",
+)
+HOST_TRANSFER_OPS = ("infeed", "outfeed", "send", "recv", "send-done",
+                     "recv-done")
+
+# jaxpr-level primitives with the same meaning (checked by the twin
+# jaxpr-side rule so the finding fires before compile when possible)
+HOST_CALLBACK_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "python_callback",
+})
+
+_F64_RE = re.compile(r"\b(f64|c128)\[")
+_SHARDING_RE = re.compile(r"sharding=\{([^}]*)\}")
+_PARAM_RE = re.compile(r"parameter\((\d+)\)")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+
+def iter_instructions(hlo_text: str):
+    """(computation, Instr) for every instruction in the module."""
+    comps, _entry = hlo_analysis.parse_module(hlo_text)
+    for comp in comps.values():
+        for ins in comp.instrs:
+            yield comp, ins
+
+
+def entry_instructions(hlo_text: str):
+    """(computation, Instr) for the ENTRY computation only."""
+    comps, entry = hlo_analysis.parse_module(hlo_text)
+    comp = comps.get(entry)
+    if comp is None:
+        return
+    for ins in comp.instrs:
+        yield comp, ins
+
+
+def collectives(hlo_text: str) -> list:
+    """Collective instructions with operand/output bytes + group size
+    (the `launch/hlo_cost.py` parser — async pairs counted once)."""
+    return hlo_cost.parse_collectives(hlo_text)
+
+
+def collective_counts(hlo_text: str) -> dict:
+    """kind -> instruction count over the whole module."""
+    out: dict = {}
+    for c in collectives(hlo_text):
+        out[c.kind] = out.get(c.kind, 0) + 1
+    return out
+
+
+def f64_lines(hlo_text: str) -> list:
+    """Instruction lines binding an f64/c128 array anywhere in the
+    module (weak-type promotion leaks show up here even when no input
+    is 64-bit)."""
+    out = []
+    for _comp, ins in iter_instructions(hlo_text):
+        if _F64_RE.search(ins.type_str):
+            out.append(ins.line.strip())
+    return out
+
+
+def host_callback_lines(hlo_text: str) -> list:
+    """Instruction lines that leave the device for the host mid-program:
+    python-callback custom-calls and raw infeed/outfeed transfers."""
+    out = []
+    for _comp, ins in iter_instructions(hlo_text):
+        if ins.op in HOST_TRANSFER_OPS:
+            out.append(ins.line.strip())
+            continue
+        if ins.op == "custom-call":
+            m = _TARGET_RE.search(ins.line)
+            if m and any(t in m.group(1) for t in HOST_CALLBACK_TARGETS):
+                out.append(ins.line.strip())
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamInfo:
+    """One ENTRY parameter of the partitioned module."""
+    name: str            # instruction name
+    index: int           # parameter ordinal
+    op_name: str         # user-facing arg name from metadata, if any
+    bytes: float         # per-device bytes
+    sharding: Optional[str]   # annotation text, None if absent
+
+    @property
+    def replicated(self) -> bool:
+        """True when the annotation says (or defaults to) full
+        replication — the parameter occupies global size on every
+        device."""
+        return self.sharding is None or self.sharding == "replicated"
+
+
+def entry_params(hlo_text: str) -> list:
+    """Every ENTRY parameter with its per-device bytes and sharding
+    annotation (the one place the partitioned module keeps them)."""
+    out = []
+    for _comp, ins in entry_instructions(hlo_text):
+        if ins.op != "parameter":
+            continue
+        pm = _PARAM_RE.search(ins.line)
+        sm = _SHARDING_RE.search(ins.line)
+        om = _OPNAME_RE.search(ins.line)
+        out.append(ParamInfo(
+            name=ins.name,
+            index=int(pm.group(1)) if pm else -1,
+            op_name=om.group(1) if om else "",
+            bytes=hlo_analysis.shape_bytes(ins.type_str),
+            sharding=sm.group(1) if sm else None))
+    return out
+
+
+def oversized_instructions(hlo_text: str, limit_bytes: float) -> list:
+    """(Instr, bytes) for every ENTRY-level non-parameter instruction
+    whose per-device output exceeds `limit_bytes` — the interior stand-in
+    for sharding coverage (an intermediate that lost its sharding
+    materializes at global size per device). ENTRY only: instructions
+    inside fusion computations carry nominal shapes that never exist as
+    buffers, so counting them would flag healthy programs."""
+    out = []
+    for _comp, ins in entry_instructions(hlo_text):
+        if ins.op in ("parameter", "constant", "tuple",
+                      "get-tuple-element"):
+            continue
+        b = hlo_analysis.shape_bytes(ins.type_str)
+        if b > limit_bytes:
+            out.append((ins, b))
+    return out

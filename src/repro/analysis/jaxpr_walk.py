@@ -1,0 +1,96 @@
+"""Recursive jaxpr walking — the single implementation every invariant
+check shares (DESIGN §8).
+
+A traced program is a tree: the top-level jaxpr's equations carry nested
+jaxprs in their params — `pjit`/`custom_vjp` hold ClosedJaxprs, `scan`/
+`while` hold ClosedJaxprs, `cond` holds a tuple of branch ClosedJaxprs,
+and `pallas_call` holds a *raw* (open) Jaxpr. Ad-hoc walkers (the old
+`tests/test_packed.py::_all_avals`) miss the raw-Jaxpr case entirely:
+`getattr(p, "jaxpr", None)` is None for a pallas_call body, so avals
+inside kernels were invisible. This module descends every nested program
+uniformly, so a rule that asks "does any aval in this program look like
+an unpacked table" means the whole program, kernels included.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator
+
+
+def _as_open_jaxpr(obj: Any):
+    """The raw Jaxpr inside `obj`, or None.
+
+    Accepts open Jaxprs (pallas_call bodies), ClosedJaxprs (pjit / scan /
+    cond branches), and anything else (returns None).
+    """
+    inner = getattr(obj, "jaxpr", None)      # ClosedJaxpr -> Jaxpr
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    if hasattr(obj, "eqns") and hasattr(obj, "invars"):
+        return obj                            # already an open Jaxpr
+    return None
+
+
+def sub_jaxprs(eqn) -> Iterator:
+    """Every nested (open) jaxpr in one equation's params, any nesting
+    convention: bare, closed, or inside a list/tuple (cond branches)."""
+    for p in eqn.params.values():
+        for item in (p if isinstance(p, (list, tuple)) else [p]):
+            inner = _as_open_jaxpr(item)
+            if inner is not None:
+                yield inner
+
+
+def all_jaxprs(jaxpr) -> Iterator:
+    """`jaxpr` plus every transitively nested sub-jaxpr (pre-order)."""
+    jaxpr = _as_open_jaxpr(jaxpr)
+    if jaxpr is None:
+        return
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for sub in sub_jaxprs(eqn):
+            yield from all_jaxprs(sub)
+
+
+def all_eqns(jaxpr) -> Iterator:
+    """Every equation in the program, kernels and branches included."""
+    for j in all_jaxprs(jaxpr):
+        yield from j.eqns
+
+
+def all_avals(jaxpr) -> Iterator:
+    """Every abstract value the program binds: inputs, constants, and
+    each equation's outputs, across all nesting levels. (Equation inputs
+    are some other equation's outputs or a binder, so this covers every
+    array the traced program can materialize.)"""
+    for j in all_jaxprs(jaxpr):
+        for v in list(j.invars) + list(j.constvars):
+            yield v.aval
+        for eqn in j.eqns:
+            for v in eqn.outvars:
+                yield v.aval
+
+
+def primitive_names(jaxpr) -> set:
+    """Names of every primitive the program applies, at any depth."""
+    return {eqn.primitive.name for eqn in all_eqns(jaxpr)}
+
+
+def aval_shapes(jaxpr) -> set:
+    """Distinct shapes of every aval in the program (arrays only)."""
+    return {tuple(a.shape) for a in all_avals(jaxpr) if hasattr(a, "shape")}
+
+
+def find_avals(jaxpr, predicate) -> list:
+    """All avals matching `predicate` (deduplicated by (shape, dtype))."""
+    seen = set()
+    out = []
+    for a in all_avals(jaxpr):
+        if not (hasattr(a, "shape") and hasattr(a, "dtype")):
+            continue
+        key = (tuple(a.shape), str(a.dtype))
+        if key in seen:
+            continue
+        if predicate(a):
+            seen.add(key)
+            out.append(a)
+    return out

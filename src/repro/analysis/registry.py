@@ -1,0 +1,358 @@
+"""Rule registry + structured findings — the core of `wnnlint`
+(DESIGN §8).
+
+A `CellProgram` is one lowered cell's evidence bundle: its closed jaxpr
+(trace-time view), its post-optimization HLO (compile-time view), and
+the static facts a rule needs to evaluate the program against the cell's
+*intent* (which shapes would be an unpacked table, what the collective
+budget is, which kernel geometries must block inside VMEM). Rules are
+small named checks with a severity and the PR that established their
+invariant; `analyze_program` evaluates every applicable rule and returns
+structured `Finding`s, which `report_json` aggregates into the
+ANALYSIS.json the CI jobs gate on.
+
+Adding a rule: write `check(prog) -> list[Finding]`, decorate with
+`@rule(name=..., severity=..., established=..., applies=...)`, and add a
+negative case to tests/test_analysis.py — a deliberately broken program
+the rule must flag. The registry is the only coupling; dryrun/CLI pick
+new rules up automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.analysis import hlo_rules, jaxpr_walk
+
+SCHEMA = "wnnlint/v1"
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation (or notable fact) in one cell's program."""
+    rule: str
+    severity: str
+    cell: str
+    message: str
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "severity": self.severity,
+                "cell": self.cell, "message": self.message,
+                "detail": self.detail}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGeometry:
+    """One submodel's kernel launch geometry — enough to evaluate the
+    analytical VMEM block plan without tracing anything."""
+    backend: str        # "fused" | "packed"
+    batch: int
+    n_f: int
+    n: int              # inputs per filter
+    m: int              # classes
+    entries: int
+    label: str = ""
+
+
+@dataclasses.dataclass
+class CellProgram:
+    """Everything the rules may inspect about one lowered cell."""
+    name: str
+    kind: str = "infer"                  # "train" | "infer"
+    jaxpr: Any = None                    # ClosedJaxpr (trace-time view)
+    hlo_text: Optional[str] = None       # compiled.as_text() (SPMD view)
+    packed: bool = False                 # packed-domain program
+    sharded: bool = False                # class-partitioned serve program
+    serving: bool = True                 # deployed-path program
+    # no-unpacked-table: the (M, N_f, E) extents that must not exist
+    unpacked_table_shapes: frozenset = frozenset()
+    # vmem-budget: kernel geometries that must block inside VMEM
+    kernel_geometries: tuple = ()
+    # collective-budget: kind -> max instruction count (absent kinds: 0)
+    collective_budget: Optional[dict] = None
+    # sharding-coverage thresholds (per-device bytes)
+    big_param_bytes: Optional[float] = None
+    max_intermediate_bytes: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    severity: str
+    established: str     # the PR whose invariant this encodes
+    doc: str
+    applies: Callable[[CellProgram], bool]
+    check: Callable[[CellProgram], list]
+
+
+RULES: dict = {}
+
+
+def rule(name: str, severity: str, established: str,
+         applies: Callable[[CellProgram], bool]):
+    """Register a check function as a named rule."""
+    if severity not in SEVERITIES:
+        raise ValueError(f"severity {severity!r} not in {SEVERITIES}")
+
+    def deco(fn):
+        RULES[name] = Rule(name=name, severity=severity,
+                           established=established,
+                           doc=(fn.__doc__ or "").strip(),
+                           applies=applies, check=fn)
+        return fn
+    return deco
+
+
+def _f(prog: CellProgram, name: str, message: str, **detail) -> Finding:
+    return Finding(rule=name, severity=RULES[name].severity,
+                   cell=prog.name, message=message, detail=detail)
+
+
+# ---------------------------------------------------------------------------
+# no-unpacked-table (PR 4): the packed path never materializes int8 tables
+# ---------------------------------------------------------------------------
+
+@rule("no-unpacked-table", "error", "PR 4",
+      applies=lambda p: p.packed and p.jaxpr is not None
+      and bool(p.unpacked_table_shapes))
+def check_no_unpacked_table(prog: CellProgram) -> list:
+    """No aval anywhere in a packed-path program — sub-jaxprs and Pallas
+    kernel bodies included — has the unpacked (M, N_f, E) table extent.
+    The 32x expansion the packed runtime exists to avoid must simply not
+    exist in the traced program (generalizes the tests/test_packed.py
+    jaxpr check)."""
+    shapes = {tuple(s) for s in prog.unpacked_table_shapes}
+    hits = jaxpr_walk.find_avals(
+        prog.jaxpr, lambda a: tuple(a.shape) in shapes)
+    return [
+        _f(prog, "no-unpacked-table",
+           f"unpacked table aval {tuple(a.shape)} ({a.dtype}) in the "
+           "packed-path program",
+           shape=list(a.shape), dtype=str(a.dtype))
+        for a in hits]
+
+
+# ---------------------------------------------------------------------------
+# no-f64 (PR 1): dtype discipline — no float64/c128 anywhere
+# ---------------------------------------------------------------------------
+
+_WIDE = ("float64", "complex128")
+
+
+@rule("no-f64", "error", "PR 1",
+      applies=lambda p: p.jaxpr is not None or p.hlo_text is not None)
+def check_no_f64(prog: CellProgram) -> list:
+    """No float64/complex128 aval in the traced program and no f64/c128
+    array in the compiled HLO. Doubled-width arithmetic is never
+    intentional here (serve math is int32/bf16/f32; weak-type promotion
+    is the classic leak) and doubles every byte the roofline charges."""
+    out = []
+    if prog.jaxpr is not None:
+        for a in jaxpr_walk.find_avals(
+                prog.jaxpr, lambda a: str(a.dtype) in _WIDE):
+            out.append(_f(prog, "no-f64",
+                          f"64-bit aval {tuple(a.shape)} {a.dtype} in the "
+                          "traced program",
+                          shape=list(a.shape), dtype=str(a.dtype)))
+    if prog.hlo_text is not None:
+        lines = hlo_rules.f64_lines(prog.hlo_text)
+        if lines:
+            out.append(_f(prog, "no-f64",
+                          f"{len(lines)} f64/c128 instruction(s) in the "
+                          "compiled HLO",
+                          lines=lines[:8]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# collective-budget (PR 5): one (B, M) score gather, nothing else moves
+# ---------------------------------------------------------------------------
+
+@rule("collective-budget", "error", "PR 5",
+      applies=lambda p: p.sharded and p.hlo_text is not None
+      and p.collective_budget is not None)
+def check_collective_budget(prog: CellProgram) -> list:
+    """The class-sharded serve program's only cross-device traffic is
+    the final (B, M) score gather: all-gather instruction count within
+    the cell's budget (one, for the serve cells) and zero all-reduces /
+    reduce-scatters / all-to-alls / collective-permutes. The tables
+    never move."""
+    budget = prog.collective_budget
+    counts = hlo_rules.collective_counts(prog.hlo_text)
+    out = []
+    for kind, count in sorted(counts.items()):
+        allowed = budget.get(kind, 0)
+        if count > allowed:
+            colls = [c for c in hlo_rules.collectives(prog.hlo_text)
+                     if c.kind == kind]
+            out.append(_f(
+                prog, "collective-budget",
+                f"{count} {kind} instruction(s), budget {allowed}",
+                kind=kind, count=count, allowed=allowed,
+                operand_bytes=[c.operand_bytes for c in colls],
+                output_bytes=[c.output_bytes for c in colls]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# no-host-callback (PR 2): serving programs never round-trip the host
+# ---------------------------------------------------------------------------
+
+@rule("no-host-callback", "error", "PR 2",
+      applies=lambda p: p.serving
+      and (p.jaxpr is not None or p.hlo_text is not None))
+def check_no_host_callback(prog: CellProgram) -> list:
+    """No io_callback/pure_callback/debug_callback primitive in the
+    traced program and no python-callback custom-call or infeed/outfeed
+    in the compiled HLO: a serving step that blocks on the host Python
+    runtime mid-program cannot meet a latency SLO and silently serializes
+    the whole batch."""
+    out = []
+    if prog.jaxpr is not None:
+        prims = (jaxpr_walk.primitive_names(prog.jaxpr)
+                 & hlo_rules.HOST_CALLBACK_PRIMITIVES)
+        for p in sorted(prims):
+            out.append(_f(prog, "no-host-callback",
+                          f"host-callback primitive {p!r} in the traced "
+                          "program", primitive=p))
+    if prog.hlo_text is not None:
+        lines = hlo_rules.host_callback_lines(prog.hlo_text)
+        if lines:
+            out.append(_f(prog, "no-host-callback",
+                          f"{len(lines)} host round-trip instruction(s) "
+                          "in the compiled HLO", lines=lines[:8]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# vmem-budget (PR 4): kernel block plans must fit VMEM at lint time
+# ---------------------------------------------------------------------------
+
+@rule("vmem-budget", "error", "PR 4",
+      applies=lambda p: bool(p.kernel_geometries))
+def check_vmem_budget(prog: CellProgram) -> list:
+    """Every kernel geometry the cell would launch blocks inside the
+    16 MiB per-core VMEM under the kernel's own `resolve_blocks` clamp —
+    evaluated analytically (`block_vmem_bytes`) at lint time, so an
+    over-budget BlockSpec is a lint finding naming the geometry instead
+    of a Mosaic trace failure naming a buffer."""
+    from repro.kernels import fused_wnn, packed_wnn
+    out = []
+    for g in prog.kernel_geometries:
+        if g.backend == "packed":
+            plan = packed_wnn.vmem_plan(g.batch, g.n, g.m, g.entries)
+            limit = packed_wnn.VMEM_LIMIT
+        elif g.backend == "fused":
+            plan = fused_wnn.vmem_plan(g.batch, g.n, g.m, g.entries)
+            limit = fused_wnn.VMEM_LIMIT
+        else:
+            continue   # gather/auto-on-CPU: no Pallas block to budget
+        if not plan["fits"]:
+            out.append(_f(
+                prog, "vmem-budget",
+                f"{g.backend} kernel block for {g.label or 'submodel'} "
+                f"(E={g.entries}, n={g.n}, M={g.m}) needs "
+                f"{plan['vmem_bytes'] / 2**20:.1f} MiB VMEM "
+                f"> {limit / 2**20:.0f} MiB at block "
+                f"({plan['block_b']}, {plan['block_f']})",
+                backend=g.backend, label=g.label, entries=g.entries,
+                block_b=plan["block_b"], block_f=plan["block_f"],
+                vmem_bytes=plan["vmem_bytes"], limit_bytes=limit))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sharding-coverage (PR 5): big arrays stay partitioned
+# ---------------------------------------------------------------------------
+
+@rule("sharding-coverage", "error", "PR 5",
+      applies=lambda p: p.sharded and p.hlo_text is not None
+      and p.big_param_bytes is not None)
+def check_sharding_coverage(prog: CellProgram) -> list:
+    """Every array above the cell's byte threshold carries a
+    (non-replicated) sharding in the compiled HLO. The partitioned
+    module keeps annotations only on ENTRY parameters, so coverage is
+    checked there; the interior is covered by a per-device size ceiling
+    — an intermediate whose sharding was lost materializes at global
+    size on every device and trips it."""
+    out = []
+    for p in hlo_rules.entry_params(prog.hlo_text):
+        if p.bytes >= prog.big_param_bytes and p.replicated:
+            out.append(_f(
+                prog, "sharding-coverage",
+                f"parameter {p.op_name or p.name} "
+                f"({p.bytes / 2**20:.2f} MiB/device) is "
+                f"{'unannotated' if p.sharding is None else 'replicated'} "
+                f"above the {prog.big_param_bytes / 2**20:.2f} MiB "
+                "threshold",
+                param=p.op_name or p.name, bytes=p.bytes,
+                sharding=p.sharding))
+    if prog.max_intermediate_bytes is not None:
+        for ins, b in hlo_rules.oversized_instructions(
+                prog.hlo_text, prog.max_intermediate_bytes):
+            out.append(_f(
+                prog, "sharding-coverage",
+                f"intermediate {ins.name} ({ins.op}) materializes "
+                f"{b / 2**20:.2f} MiB/device, above the "
+                f"{prog.max_intermediate_bytes / 2**20:.2f} MiB "
+                "per-device ceiling — sharding lost upstream",
+                instruction=ins.name, op=ins.op, bytes=b))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Evaluation + report
+# ---------------------------------------------------------------------------
+
+def analyze_program(prog: CellProgram, rules=None) -> list:
+    """Evaluate every applicable rule; findings sorted error-first."""
+    todo = [RULES[r] for r in rules] if rules is not None \
+        else list(RULES.values())
+    findings = []
+    for r in todo:
+        if r.applies(prog):
+            findings.extend(r.check(prog))
+    order = {s: i for i, s in enumerate(SEVERITIES)}
+    findings.sort(key=lambda f: (order[f.severity], f.rule))
+    return findings
+
+
+def count(findings, severity: str) -> int:
+    return sum(1 for f in findings if f.severity == severity)
+
+
+def summarize(findings) -> dict:
+    return {"errors": count(findings, "error"),
+            "warnings": count(findings, "warning"),
+            "findings": [f.to_json() for f in findings]}
+
+
+def report_json(cell_summaries: dict) -> dict:
+    """{cell tag -> summarize(findings)} -> the ANALYSIS.json document."""
+    cells = dict(sorted(cell_summaries.items()))
+    return {
+        "schema": SCHEMA,
+        "rules": {r.name: {"severity": r.severity,
+                           "established": r.established,
+                           "doc": r.doc.splitlines()[0] if r.doc else ""}
+                  for r in RULES.values()},
+        "errors": sum(c["errors"] for c in cells.values()),
+        "warnings": sum(c["warnings"] for c in cells.values()),
+        "cells": cells,
+    }
+
+
+def render_findings(per_cell: dict, *, verbose: bool = False) -> str:
+    """Human-readable lint output (the CLI and dryrun --analyze print)."""
+    lines = []
+    for tag, findings in sorted(per_cell.items()):
+        errs, warns = count(findings, "error"), count(findings, "warning")
+        status = "FAIL" if errs else "ok"
+        lines.append(f"[wnnlint] {tag}: {status} "
+                     f"({errs} error(s), {warns} warning(s))")
+        for f in findings:
+            if f.severity != "info" or verbose:
+                lines.append(f"  {f.severity.upper()} {f.rule}: {f.message}")
+    return "\n".join(lines)

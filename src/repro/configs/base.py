@@ -98,7 +98,7 @@ class ArchConfig:
         """Vocab rounded up to a multiple of 256 so the vocab axis always
         shards over `model` (=16) and logits hit MXU-aligned tiles (×128).
         Standard TPU practice (MaxText does the same); the pad logits are
-        masked to -inf in the loss. Structural change noted in DESIGN §8."""
+        masked to -inf in the loss. Structural change noted in DESIGN §9."""
         return -(-self.vocab_size // 256) * 256
 
     def param_count(self) -> float:

@@ -1,7 +1,7 @@
 """whisper-tiny [audio]: enc-dec, conv frontend stubbed (input_specs provides
 precomputed (B, 1500, 384) frame embeddings). [arXiv:2212.04356]
 
-Structural note (DESIGN §8): learned positions extended to 32768 so the
+Structural note (DESIGN §9): learned positions extended to 32768 so the
 assigned train_4k/prefill_32k/decode_32k shapes lower (the published
 448-position table is a trained-weights property, not a structural one).
 """

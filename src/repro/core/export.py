@@ -256,7 +256,11 @@ def scores_from_prep(prep, bits: jnp.ndarray, *,
             scores + ops.wnn_scores(tuples, h3, table, mask, zero_bias,
                                     backend=backend),
             ("batch", "classes"))
-    return scores + prep.bias[None]
+    # pin the bias add too: bias is class-sharded, and an unconstrained
+    # `scores + bias` lets GSPMD hoist the gather above the add — two
+    # all-gathers instead of the dataflow's promised one
+    return sh.logical_constraint(scores + prep.bias[None],
+                                 ("batch", "classes"))
 
 
 def predict_from_prep(prep, bits: jnp.ndarray, *,

@@ -108,7 +108,7 @@ def init_params(key: jax.Array, spec: UleenSpec,
     signal exists from step one. init_scale only sets the range; STE
     dynamics are identical up to a time rescale (an entry flips after
     ~|init|/lr consistent gradient steps), so small-scale CPU runs use 0.1
-    (DESIGN §8)."""
+    (DESIGN §9)."""
     tables = []
     masks = []
     for sm in spec.submodels:

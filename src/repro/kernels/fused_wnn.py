@@ -36,6 +36,10 @@ def _h3_hashes(bits_i32: jnp.ndarray, params_row) -> jnp.ndarray:
 
 
 VMEM_BUDGET = 4 * 1024 * 1024
+# hard per-core VMEM on the target TPU generation — a block plan past this
+# is not a perf problem but a Mosaic trace failure (kernel_bench skips such
+# geometries; the `vmem-budget` lint rule flags them before trace time)
+VMEM_LIMIT = 16 * 1024 * 1024
 
 
 def resolve_blocks(b: int, entries: int, *, block_b: int = 128,
@@ -55,6 +59,18 @@ def block_vmem_bytes(block_b: int, block_f: int, n: int, m: int,
             + m * block_f * entries          # table int8
             + block_b * block_f * entries    # one-hot int8
             + block_b * m * 4)               # accumulator int32
+
+
+def vmem_plan(b: int, n: int, m: int, entries: int, *,
+              block_b: int = 128, block_f: int = 256) -> dict:
+    """The block geometry `fused_wnn` would launch for (b, n, m, entries)
+    and whether its analytical VMEM footprint fits the hard per-core
+    limit — evaluated without tracing, so the lint layer can flag an
+    over-budget BlockSpec as a finding instead of a Mosaic failure."""
+    bb, bf = resolve_blocks(b, entries, block_b=block_b, block_f=block_f)
+    vmem = block_vmem_bytes(bb, bf, n, m, entries)
+    return {"block_b": bb, "block_f": bf, "vmem_bytes": vmem,
+            "fits": vmem <= VMEM_LIMIT}
 
 
 def fused_wnn_kernel(tuples_ref, params_ref, table_ref, mask_ref, bias_ref,

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.fused_wnn import _h3_hashes
+from repro.kernels.fused_wnn import VMEM_LIMIT, _h3_hashes
 # the single definition of the packed word-width rule (one whole padded
 # word for E < 32) — validation (ops.py) and kernel blocking must agree
 from repro.packed.layout import word_count  # noqa: F401 (re-exported)
@@ -58,6 +58,19 @@ def block_vmem_bytes(block_b: int, block_f: int, n: int, m: int,
             + m * block_f * words * 4        # packed table int32
             + block_b * block_f * words * 4  # word one-hot int32
             + block_b * m * 4)               # accumulator int32
+
+
+def vmem_plan(b: int, n: int, m: int, entries: int, *,
+              block_b: int = 128, block_f: int = 512) -> dict:
+    """The block geometry `packed_wnn` would launch for (b, n, m, entries)
+    and whether its analytical VMEM footprint fits the hard per-core
+    limit (`fused_wnn.VMEM_LIMIT`) — the packed twin of
+    `fused_wnn.vmem_plan`, taking E and deriving W = word_count(E)."""
+    w = word_count(entries)
+    bb, bf = resolve_blocks(b, w, block_b=block_b, block_f=block_f)
+    vmem = block_vmem_bytes(bb, bf, n, m, w)
+    return {"block_b": bb, "block_f": bf, "vmem_bytes": vmem,
+            "fits": vmem <= VMEM_LIMIT}
 
 
 def packed_wnn_kernel(tuples_ref, params_ref, words_ref, mask_ref, bias_ref,

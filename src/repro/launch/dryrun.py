@@ -128,9 +128,24 @@ def lower_cell(cfg, shape, mesh, *, extra_flags: dict | None = None):
     return record, compiled
 
 
+def analyze_compiled(record: dict, prog) -> None:
+    """Run the wnnlint rules over one cell's program and fold the
+    findings into its record (`record["analysis"]`, the per-cell shape of
+    ANALYSIS.json). Error-severity findings flip `ok` to False so the
+    sweep's exit code — and the nightly job — fails on them."""
+    from repro.analysis import registry
+    findings = registry.analyze_program(prog)
+    record["analysis"] = registry.summarize(findings)
+    print(registry.render_findings({prog.name: findings}))
+    if record["analysis"]["errors"]:
+        record["ok"] = False
+        record["error"] = (f"wnnlint: {record['analysis']['errors']} "
+                           "error-severity finding(s)")
+
+
 def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
                    shape: str = "train_mnist_scale",
-                   backend: str = "auto") -> dict:
+                   backend: str = "auto", analyze: bool = False) -> dict:
     """Bonus cells: the paper's own train/infer steps on the production mesh.
 
     shape="train_mnist_scale" lowers the multi-shot STE training step;
@@ -269,6 +284,11 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
               f"terms(c/m/coll)={roofs['compute_s']:.3e}/"
               f"{roofs['memory_s']:.3e}/{roofs['collective_s']:.3e} "
               f"dominant={roofs['dominant']}{shard_note}")
+        if analyze:
+            from repro.analysis import cells as lint_cells
+            prog = lint_cells.uleen_cell_program(
+                shape, mesh, backend=backend, compiled=compiled)
+            analyze_compiled(record, prog)
     except Exception as e:
         record = {"arch": arch_tag.replace("_", "-"),
                   "shape": shape,
@@ -288,10 +308,11 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             out_dir: str | None, *, backend: str = "auto") -> dict:
+             out_dir: str | None, *, backend: str = "auto",
+             analyze: bool = False) -> dict:
     if arch == "uleen":
         return run_uleen_cell(multi_pod, out_dir, shape=shape_name,
-                              backend=backend)
+                              backend=backend, analyze=analyze)
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -305,6 +326,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
               f"terms(c/m/coll)={roof['compute_s']:.3e}/"
               f"{roof['memory_s']:.3e}/{roof['collective_s']:.3e} "
               f"dominant={roof['dominant']} useful={roof['useful_ratio']:.2f}")
+        if analyze:
+            from repro.analysis import cells as lint_cells
+            prog = lint_cells.hlo_cell_program(tag, shape.kind,
+                                               compiled.as_text())
+            analyze_compiled(record, prog)
     except Exception as e:
         record = {"arch": cfg.name, "shape": shape_name,
                   "mesh": "pod2" if multi_pod else "pod1", "ok": False,
@@ -330,6 +356,10 @@ def main(argv=None) -> int:
                     default="single")
     ap.add_argument("--all", action="store_true",
                     help="every applicable (arch × shape)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="run the wnnlint invariant rules (repro.analysis) "
+                         "over every compiled cell; error findings flip "
+                         "the cell to ok:false and fail the sweep")
     ap.add_argument("--out", default=None, help="JSON output dir")
     args = ap.parse_args(argv)
 
@@ -338,6 +368,11 @@ def main(argv=None) -> int:
         for arch in ARCH_IDS:
             for shp in shapes_for(get_config(arch)):
                 cells.append((arch, shp.name))
+        for shp in ULEEN_SHAPES:
+            cells.append(("uleen", shp))
+    elif args.arch == "uleen" and not args.shape:
+        # whole-arch sweep: every uleen cell (the --analyze acceptance run)
+        cells = [("uleen", shp) for shp in ULEEN_SHAPES]
     else:
         if not (args.arch and args.shape):
             ap.error("--arch and --shape required unless --all")
@@ -349,10 +384,26 @@ def main(argv=None) -> int:
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
     failures = 0
+    records = {}
     for arch, shp in cells:
         for mp in meshes:
-            rec = run_cell(arch, shp, mp, args.out, backend=args.backend)
+            rec = run_cell(arch, shp, mp, args.out, backend=args.backend,
+                           analyze=args.analyze)
+            tag = f"{rec['arch']}.{shp}.{'pod2' if mp else 'pod1'}"
+            records[tag] = rec
             failures += 0 if rec.get("ok") else 1
+    if args.analyze:
+        from repro.analysis import registry
+        doc = registry.report_json({
+            tag: rec["analysis"] for tag, rec in records.items()
+            if "analysis" in rec})
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            with open(os.path.join(args.out, "ANALYSIS.json"), "w") as f:
+                json.dump(doc, f, indent=1)
+        print(f"[dryrun] wnnlint: {doc['errors']} error(s), "
+              f"{doc['warnings']} warning(s) across "
+              f"{len(doc['cells'])} analyzed cell(s)")
     print(f"[dryrun] done: {len(cells) * len(meshes) - failures} ok, "
           f"{failures} failed")
     return 1 if failures else 0

@@ -24,7 +24,7 @@ C_FACTOR = 8.0
 def _gates(p, x):
     # Per-channel (block size 1) gate projections — Griffin uses block-
     # diagonal gate weights; the diagonal case keeps the recurrence width
-    # shardable over `model` with no extra collectives (DESIGN §8).
+    # shardable over `model` with no extra collectives (DESIGN §9).
     r = jax.nn.sigmoid(x * p["w_a"] + p["b_a"])
     i = jax.nn.sigmoid(x * p["w_x"] + p["b_x"])
     log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r

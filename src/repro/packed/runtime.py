@@ -57,7 +57,12 @@ def packed_scores(pt: PackedTables, bits: jnp.ndarray, *,
             scores + ops.wnn_scores(tuples, h3, words, mask, zero_bias,
                                     backend=backend, entries=entries),
             ("batch", "classes"))
-    return scores + pt.bias[None]
+    # the bias add must ALSO be pinned: bias is class-sharded, and an
+    # unconstrained `scores + bias` lets GSPMD hoist the gather above the
+    # add — two all-gathers of the (B, M) matrix instead of the one this
+    # dataflow promises (the collective-budget lint rule enforces it)
+    return sh.logical_constraint(scores + pt.bias[None],
+                                 ("batch", "classes"))
 
 
 def packed_predict(pt: PackedTables, bits: jnp.ndarray, *,

@@ -165,8 +165,22 @@ def test_backend_dispatch_resolution_and_validation():
     assert ops.resolve_wnn_backend("gather") == "gather"
     expected_auto = "fused" if jax.default_backend() == "tpu" else "gather"
     assert ops.resolve_wnn_backend("auto") == expected_auto
-    with pytest.raises(ValueError, match="backend"):
-        ops.resolve_wnn_backend("mosaic")
+    # unknown strings are rejected with the full list of valid choices —
+    # never silently falling through to some default formulation
+    for bogus in ("mosaic", "", "Fused", "packed32"):
+        with pytest.raises(ValueError) as exc:
+            ops.resolve_wnn_backend(bogus)
+        msg = str(exc.value)
+        assert repr(bogus) in msg
+        for valid in ops.WNN_BACKENDS:
+            assert valid in msg
+    # and the same rejection surfaces through the public dispatch entry
+    with pytest.raises(ValueError, match="must be one of"):
+        ops.wnn_scores(jnp.zeros((2, 3, 4), jnp.int8),
+                       jnp.zeros((2, 4), jnp.int32),
+                       jnp.zeros((5, 3, 16), jnp.int8),
+                       jnp.zeros((5, 3), jnp.int8),
+                       jnp.zeros((5,), jnp.int32), backend="mosaic")
 
     tuples = jnp.zeros((2, 3, 4), jnp.int8)
     params = jnp.zeros((2, 4), jnp.int32)

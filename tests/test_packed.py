@@ -233,38 +233,32 @@ def test_packed_all_zero_mask_scores_are_pure_bias():
 # ---------------------------------------------------------------------------
 # The traced packed serve path holds no int8 table
 # ---------------------------------------------------------------------------
-
-def _all_avals(jaxpr):
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield v.aval
-        for p in eqn.params.values():
-            subs = p if isinstance(p, (list, tuple)) else [p]
-            for s in subs:
-                inner = getattr(s, "jaxpr", None)
-                if inner is not None:
-                    yield from _all_avals(inner)
-
+# The jaxpr walking + shape check live in `repro.analysis` (DESIGN §8) —
+# this test and the CI lint (`scripts/lint_programs.py`) share one
+# implementation of both the walker and the rule.
 
 def test_packed_trace_never_materializes_int8_tables(tiny_spec,
                                                      tiny_statics,
                                                      tiny_params, encoded):
     """No intermediate in the traced packed program has the unpacked
-    (M, N_f, E) extent — the 32× expansion simply does not exist."""
+    (M, N_f, E) extent — the 32× expansion simply does not exist. Checked
+    by the `no-unpacked-table` lint rule itself."""
+    from repro.analysis import CellProgram, analyze_program, aval_shapes
     bits_tr, *_ = encoded
     pt = binarize_to_packed(tiny_spec, tiny_statics, tiny_params)
     bits = jnp.asarray(bits_tr[:16])
     jaxpr = jax.make_jaxpr(
         lambda p, b: packed_scores(p, b, backend="auto"))(pt, bits)
-    unpacked_shapes = {
+    unpacked_shapes = frozenset(
         (tiny_spec.num_classes, tiny_spec.num_filters(sm), sm.entries)
-        for sm in tiny_spec.submodels}
-    seen = {tuple(a.shape) for a in _all_avals(jaxpr.jaxpr)
-            if hasattr(a, "shape")}
-    assert not (seen & unpacked_shapes), \
-        f"traced packed path materialized an unpacked table: " \
-        f"{seen & unpacked_shapes}"
-    # sanity: the same check *does* trip on the unpacked gather path
+        for sm in tiny_spec.submodels)
+    findings = analyze_program(
+        CellProgram(name="tiny.packed", jaxpr=jaxpr, packed=True,
+                    unpacked_table_shapes=unpacked_shapes),
+        rules=["no-unpacked-table"])
+    assert not findings, \
+        f"traced packed path materialized an unpacked table: {findings}"
+    # sanity: the same rule *does* trip on the unpacked gather path
     tables_bin, masks, bias = (
         tuple(jnp.where(t >= 0, 1, 0).astype(jnp.int8)
               for t in tiny_params.tables),
@@ -273,9 +267,12 @@ def test_packed_trace_never_materializes_int8_tables(tiny_spec,
         lambda bb: forward_binary_fused(tiny_spec, tiny_statics, tables_bin,
                                         masks, bias, bb,
                                         backend="gather"))(bits)
-    seen_g = {tuple(a.shape) for a in _all_avals(jaxpr_g.jaxpr)
-              if hasattr(a, "shape")}
-    assert seen_g & unpacked_shapes
+    findings_g = analyze_program(
+        CellProgram(name="tiny.gather", jaxpr=jaxpr_g, packed=True,
+                    unpacked_table_shapes=unpacked_shapes),
+        rules=["no-unpacked-table"])
+    assert findings_g, "the rule must flag the unpacked gather program"
+    assert aval_shapes(jaxpr_g) & unpacked_shapes
 
 
 # ---------------------------------------------------------------------------
