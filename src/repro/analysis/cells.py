@@ -36,6 +36,7 @@ from repro.packed.layout import word_count
 # shape name -> (spec, kind) — mirrors launch/dryrun.py::run_uleen_cell
 ULEEN_CELLS = {
     "train_mnist_scale": (uleen_cell.ULN_L_SPEC, "train"),
+    "train_host_exec": (uleen_cell.ULEEN_EXEC_SPEC, "train"),
     "infer_mnist_scale": (uleen_cell.ULN_L_SPEC, "infer"),
     "infer_packed_scale": (uleen_cell.ULN_XL_SPEC, "infer"),
     "infer_sharded_scale": (uleen_cell.ULN_XL_ENSEMBLE_SPEC, "infer"),
@@ -104,6 +105,34 @@ def uleen_cell_program(shape: str, mesh, *,
 
     prog = CellProgram(name=f"uleen.{shape}", kind=kind,
                        serving=not train)
+
+    if shape == "train_host_exec":
+        # The executed distributed step (DESIGN §10). Its home is the
+        # 8-device (pod=2, data=4) exec mesh — lint CLI meshes have no
+        # `pod` axis, so the cell builds its own (the program is a
+        # function of the mesh; linting it on a pod-less mesh would lint
+        # a different program than the one dryrun runs).
+        from repro.launch.mesh import make_mesh
+        from repro.train import optimizer as opt_lib
+        if "pod" not in mesh.axis_names:
+            mesh = make_mesh((2, 4), ("pod", "data"))
+        batch = (global_batch if global_batch is not None
+                 else uleen_cell.EXEC_BATCH)
+        optimizer = opt_lib.adam(1e-3)
+        step = uleen_cell.make_uleen_dist_train_step(
+            spec, optimizer, mesh, compress=True)
+        ins, _sh = uleen_cell.uleen_cell_specs(spec, mesh,
+                                               global_batch=batch)
+        opt_spec = jax.eval_shape(optimizer.init, ins["params"])
+        with sh.use_mesh(mesh, rules):
+            prog.jaxpr = jax.make_jaxpr(step)(
+                ins["params"], opt_spec, ins["statics"], ins["bits"],
+                ins["labels"], ins["rng"])
+            if with_hlo and compiled is None:
+                compiled = uleen_cell.lower_uleen_dist_cell(
+                    mesh, global_batch=batch, compress=True)
+        prog.hlo_text = compiled.as_text() if compiled is not None else None
+        return prog
 
     if shape == "train_mnist_scale":
         from repro.train import optimizer as opt_lib

@@ -45,8 +45,64 @@ def cross_entropy(scores: jnp.ndarray, labels: jnp.ndarray,
     return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
 
 
+def block_rng(rng: jax.Array, block: int | jnp.ndarray) -> jax.Array:
+    """The dropout rng of batch block `block` within one step.
+
+    Shared by the blocked single-device reference (`grad_blocks > 1`) and
+    the distributed trainer (`launch/uleen_cell.make_uleen_dist_train_step`)
+    — identical folding is what makes their dropout masks, and therefore
+    their gradients, bit-identical (DESIGN §10).
+    """
+    return jax.random.fold_in(rng, block)
+
+
+def blocked_grads(loss_fn, params, hashes, labels, rng, grad_blocks: int):
+    """(grads, loss, acc) via the canonical blocked batch reduction.
+
+    The batch splits into `grad_blocks` equal row blocks; each block's
+    gradient is computed whole (its own dropout rng via `block_rng`), and
+    the blocks combine by a left fold in block order (lax.scan), divided
+    by the block count at the end. The fold order is FIXED — independent
+    of how the batch is later laid out over a mesh — so a distributed
+    trainer that computes the same blocks on different devices and folds
+    the gathered stack reproduces this function bit-for-bit (DESIGN §10:
+    float addition is not associative; a plain `jnp.mean` over a sharded
+    batch is reduced in mesh-dependent order and drifts ~1e-7/step).
+    """
+    s = grad_blocks
+    b = labels.shape[0]
+    if b % s:
+        raise ValueError(f"batch {b} not divisible by grad_blocks {s}")
+    hs = tuple(h.reshape(s, b // s, *h.shape[1:]) for h in hashes)
+    ys = labels.reshape(s, b // s)
+    rngs = jax.vmap(lambda i: block_rng(rng, i))(jnp.arange(s))
+
+    def body(acc, xs):
+        g_acc, l_acc, a_acc = acc
+        hb, yb, rb = xs
+        (loss, bacc), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, hb, yb, rb)
+        g_acc = jax.tree.map(lambda x, y: x + y, g_acc, g)
+        return (g_acc, l_acc + loss, a_acc + bacc), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss, acc), _ = jax.lax.scan(
+        body, (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ys, rngs))
+    inv = 1.0 / s
+    return jax.tree.map(lambda g: g * inv, grads), loss * inv, acc * inv
+
+
 def make_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer,
-                    clip_table: float = 1.0, smoothing: float = 0.0) -> Callable:
+                    clip_table: float = 1.0, smoothing: float = 0.0,
+                    *, grad_blocks: int = 1) -> Callable:
+    """The single-device multi-shot STE train step.
+
+    grad_blocks=1 (default) is the plain formulation every example/test
+    uses. grad_blocks=S>1 switches to the canonical blocked batch
+    reduction (`blocked_grads`) — the parity reference the executed
+    distributed trainer is asserted bit-identical against (DESIGN §10).
+    """
     def loss_fn(params: UleenParams, hashes, labels, rng):
         scores = forward(spec, params, hashes, train=True, rng=rng)
         loss = cross_entropy(scores, labels, smoothing)
@@ -54,8 +110,12 @@ def make_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer,
         return loss, acc
 
     def train_step(params, opt_state, hashes, labels, rng):
-        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, hashes, labels, rng)
+        if grad_blocks > 1:
+            grads, loss, acc = blocked_grads(loss_fn, params, hashes,
+                                             labels, rng, grad_blocks)
+        else:
+            (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, hashes, labels, rng)
         updates, opt_state = optimizer.update(grads, opt_state, params)
         params = opt_lib.apply_updates(params, updates)
         if clip_table:

@@ -36,8 +36,11 @@ from repro.launch import hlo_cost, specs, steps
 from repro.launch.mesh import make_production_mesh
 from repro.train import optimizer as opt_lib
 
-# the uleen bonus-cell shapes (run_uleen_cell + CLI validation share this)
-ULEEN_SHAPES = ("train_mnist_scale", "infer_mnist_scale",
+# the uleen bonus-cell shapes (run_uleen_cell + CLI validation share this).
+# train_host_exec is the one cell that EXECUTES, not just lowers: a real
+# distributed multi-shot run on an 8-device (pod=2, data=4) sub-mesh with a
+# bit-exact parity probe against the single-device reference (DESIGN §10).
+ULEEN_SHAPES = ("train_mnist_scale", "train_host_exec", "infer_mnist_scale",
                 "infer_packed_scale", "infer_sharded_scale")
 
 
@@ -143,6 +146,107 @@ def analyze_compiled(record: dict, prog) -> None:
                            "error-severity finding(s)")
 
 
+def run_uleen_exec_cell(multi_pod: bool, out_dir: str | None, *,
+                        analyze: bool = False) -> dict:
+    """train_host_exec: the one dryrun cell that RUNS (DESIGN §10).
+
+    On an 8-device (pod=2, data=4) sub-mesh of the 512 placeholder
+    devices: AOT-compiles the executed distributed train step (int8
+    cross-pod compression on) for the memory/roofline record, then
+    (a) runs a 2-step bit-exact parity probe — distributed uncompressed
+    vs the single-device blocked reference — and (b) executes 3 real
+    compressed steps through `train.train_uleen`. Non-finite losses or
+    any parity bit flips the record to ok:false, so the nightly sweep
+    and scripts/diff_dryrun.py gate on the trainer actually *working*,
+    not just lowering.
+    """
+    from repro.launch import train as train_mod
+    from repro.launch import uleen_cell
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    tag = f"uleen_exec.train_host_exec.{'pod2' if multi_pod else 'pod1'}"
+    spec = uleen_cell.ULEEN_EXEC_SPEC
+    try:
+        t0 = time.time()
+        compiled = uleen_cell.lower_uleen_dist_cell(mesh, compress=True)
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        # paper-style WNN op count (hash XORs + lookups + popcount adds),
+        # x3 for the STE backward's gather/scatter pair
+        ops_per_sample = sum(
+            spec.num_filters(sm) * sm.num_hashes *
+            (sm.inputs_per_filter + 1) + spec.num_filters(sm)
+            for sm in spec.submodels) * spec.num_classes * 3
+        mflops = float(ops_per_sample * uleen_cell.EXEC_BATCH)
+        roof = hlo_cost.roofline_from(compiled.as_text(), cost,
+                                      mesh.devices.size, mflops)
+
+        parity = train_mod.uleen_parity_probe(mesh, steps=2)
+        sp, statics, bits, labels = train_mod.uleen_smoke_problem(
+            0, n_train=1024)
+        t0 = time.time()
+        out = train_mod.train_uleen(sp, statics, bits, labels,
+                                    steps_total=3, global_batch=256,
+                                    mesh=mesh, compress=True,
+                                    verbose=False)
+        t_exec = time.time() - t0
+        losses = [h["loss"] for h in out["history"]]
+        finite = all(jnp.isfinite(jnp.asarray(losses)).tolist())
+
+        record = {
+            "arch": "uleen-exec", "shape": "train_host_exec",
+            "kind": "train", "backend": None,
+            "mesh": "x".join(str(d) for d in mesh.devices.shape),
+            "chips": mesh.devices.size,
+            "ok": bool(finite and parity == 0.0),
+            "lower_s": 0.0, "compile_s": round(t_compile, 2),
+            "memory": {
+                "args_gib": mem.argument_size_in_bytes / 2**30,
+                "output_gib": mem.output_size_in_bytes / 2**30,
+                "temp_gib": mem.temp_size_in_bytes / 2**30,
+                "alias_gib": mem.alias_size_in_bytes / 2**30,
+                "peak_gib": (mem.argument_size_in_bytes
+                             + mem.output_size_in_bytes
+                             + mem.temp_size_in_bytes
+                             - mem.alias_size_in_bytes) / 2**30,
+            },
+            "roofline": roof.summary(),
+            "exec": {
+                "steps": len(losses), "compressed": True,
+                "losses": [round(l, 6) for l in losses],
+                "exec_s": round(t_exec, 2),
+                "parity_max_diff": parity,
+                "parity_steps": 2,
+            },
+        }
+        if not record["ok"]:
+            record["error"] = (f"executed-cell gate: parity={parity} "
+                               f"finite={finite}")
+        print(f"[dryrun] {tag}: {'OK' if record['ok'] else 'FAIL'} "
+              f"compile={record['compile_s']}s exec={t_exec:.2f}s "
+              f"losses={losses[0]:.4f}->{losses[-1]:.4f} "
+              f"parity_max_diff={parity}")
+        if analyze:
+            from repro.analysis import cells as lint_cells
+            prog = lint_cells.uleen_cell_program("train_host_exec", mesh,
+                                                 compiled=compiled)
+            analyze_compiled(record, prog)
+    except Exception as e:
+        record = {"arch": "uleen-exec", "shape": "train_host_exec",
+                  "kind": "train", "backend": None,
+                  "mesh": "pod2" if multi_pod else "pod1", "ok": False,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+        print(f"[dryrun] {tag}: FAIL {record['error'][:300]}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
 def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
                    shape: str = "train_mnist_scale",
                    backend: str = "auto", analyze: bool = False) -> dict:
@@ -163,6 +267,8 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
     if shape not in ULEEN_SHAPES:
         raise ValueError(f"uleen cells lower only {ULEEN_SHAPES}, "
                          f"got {shape!r}")
+    if shape == "train_host_exec":
+        return run_uleen_exec_cell(multi_pod, out_dir, analyze=analyze)
     mesh = make_production_mesh(multi_pod=multi_pod)
     infer = shape != "train_mnist_scale"
     packed_cell = shape == "infer_packed_scale"

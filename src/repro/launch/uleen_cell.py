@@ -13,8 +13,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import model as uleen
+from repro.core import multi_shot
 from repro.core.model import SubmodelSpec, UleenSpec
 from repro.core.multi_shot import cross_entropy
 from repro.dist import sharding as sh
@@ -33,6 +35,17 @@ ULN_L_SPEC = UleenSpec(
 
 GLOBAL_BATCH = 131072      # fleet-scale data parallelism
 INFER_BATCH = 65536        # fleet-scale serving batch (binary model)
+
+# The *executed* trainer cell's geometry (DESIGN §10): the tiny 2-submodel
+# ensemble every in-container execution surface shares (dryrun
+# train_host_exec, the --arch uleen CLI, tests). 16x16 mnist-like at
+# 2 thermometer bits = 512 total bits; small enough that a real 10-step
+# distributed run + its single-device parity reference fit in a CI smoke.
+ULEEN_EXEC_SPEC = UleenSpec(
+    num_classes=10, total_bits=512,
+    submodels=(SubmodelSpec(12, 6), SubmodelSpec(16, 6)),
+    bits_per_input=2)
+EXEC_BATCH = 256           # global batch of the executed host-mesh cell
 
 # ULN-XL: an ensemble past the int8 kernel's VMEM blocking — E up to 2^15
 # means the fused one-hot alone (block_b × block_f × E int8) overflows the
@@ -76,6 +89,143 @@ def make_uleen_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer):
         return params, opt_state, loss
 
     return train_step
+
+
+def make_uleen_dist_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer,
+                               mesh, *, grad_blocks: int = 8,
+                               compress: bool = False,
+                               clip_table: float = 1.0,
+                               smoothing: float = 0.0):
+    """The *executed* distributed multi-shot step (DESIGN §10).
+
+    Deterministic blocked batch reduction: the global batch splits into a
+    FIXED number of blocks S=`grad_blocks` (mesh-independent), each block's
+    gradient is computed whole on one device, and the block gradients are
+    all-gathered and left-folded in global block order. Because both the
+    block boundaries and the fold order are functions of S alone, the
+    result is bit-identical to `core.multi_shot.make_train_step(...,
+    grad_blocks=S)` on one device — and to itself across mesh shapes
+    ((pod, data), (data,), single device), which is what makes the
+    elastic 8→4→1 restart drill byte-reproducible.
+
+    compress=True routes the cross-pod hop through `compressed_psum`
+    (int8 wire): block sums reduce in fp32 over `data` (intra-pod ICI),
+    the per-pod mean crosses `pod` as int8. Divergence from the exact
+    path is bounded by the quantisation step — asserted per-step in
+    tests/test_distributed_training.py (max |Δparam| ≤ lr·(t+1)·1.25
+    for Adam, whose per-step update magnitude is capped ≈ lr).
+
+    Step: (params, opt_state, statics, bits, labels, rng) ->
+    (params, opt_state, loss, acc), jit-able with batch sharded over all
+    mesh axes and everything else replicated (`uleen_dist_specs`).
+    """
+    from repro.train.compression import compressed_psum
+
+    axes = tuple(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ndev = 1
+    for d in mesh.devices.shape:
+        ndev *= d
+    s = grad_blocks
+    if s % ndev:
+        raise ValueError(f"grad_blocks {s} not divisible by {ndev} devices")
+    bpd = s // ndev                      # blocks per device
+    npods = sizes.get("pod", 1)
+    if compress and "pod" not in sizes:
+        raise ValueError("compress=True needs a `pod` mesh axis")
+
+    def loss_fn(p, hashes, labels, rng):
+        scores = uleen.forward(spec, p, hashes, train=True, rng=rng)
+        loss = cross_entropy(scores, labels, smoothing)
+        acc = jnp.mean(jnp.argmax(scores, -1) == labels)
+        return loss, acc
+
+    def local(params, statics_t, bits_l, labels_l, rng):
+        sts = [uleen.SubmodelStatic(*st) for st in statics_t]
+        # Linear device index in mesh order == global block order: device
+        # (i_pod, i_data) holds blocks [dev*bpd, (dev+1)*bpd) of the
+        # S-block global batch, matching the all_gather concatenation
+        # order below, so the fold visits blocks 0..S-1 exactly as the
+        # single-device reference does.
+        dev = jnp.int32(0)
+        for a in axes:
+            dev = dev * sizes[a] + jax.lax.axis_index(a)
+        rows = bits_l.shape[0] // bpd
+        bs = bits_l.reshape(bpd, rows, bits_l.shape[1])
+        ys = labels_l.reshape(bpd, rows)
+
+        def block(j):
+            rb = multi_shot.block_rng(rng, dev * bpd + j)
+            h = uleen.compute_hashes(spec, sts, bs[j])
+            (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, h, ys[j], rb)
+            return g, l, a
+
+        gs, ls, accs = jax.lax.map(block, jnp.arange(bpd))
+
+        if compress:
+            # fp32 intra-pod (ICI), int8 cross-pod (the scarce link).
+            gsum = jax.tree.map(lambda x: jnp.sum(x, 0), gs)
+            gpod = jax.tree.map(
+                lambda x: jax.lax.psum(x, "data") * (npods / s)
+                if "data" in sizes else x * (npods / s), gsum)
+            g, _ = compressed_psum(gpod, "pod")
+            loss = jax.lax.pmean(jnp.mean(ls), axes)
+            acc = jax.lax.pmean(jnp.mean(accs), axes)
+            return g, loss, acc
+
+        # Exact path: gather the per-block stacks (bit-preserving — no
+        # arithmetic on the wire) and left-fold in global block order.
+        gall = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axes).reshape(s, *x.shape[1:]),
+            gs)
+        lall = jax.lax.all_gather(ls, axes).reshape(s)
+        aall = jax.lax.all_gather(accs, axes).reshape(s)
+
+        def body(acc_c, xs):
+            g_acc, l_acc, a_acc = acc_c
+            gb, lb, ab = xs
+            return (jax.tree.map(lambda x, y: x + y, g_acc, gb),
+                    l_acc + lb, a_acc + ab), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (g, l, a), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32),
+                   jnp.zeros((), jnp.float32)), (gall, lall, aall))
+        inv = 1.0 / s
+        return (jax.tree.map(lambda x: x * inv, g), l * inv, a * inv)
+
+    bspec = P(axes if len(axes) > 1 else axes[0])
+    grads_fn = sh.shard_map(
+        local, mesh,
+        in_specs=(P(), P(), bspec, bspec, P()),
+        out_specs=P())
+
+    def train_step(params, opt_state, statics, bits, labels, rng):
+        statics_t = tuple(tuple(st) for st in statics)
+        grads, loss, acc = grads_fn(params, statics_t, bits, labels, rng)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        if clip_table:
+            params = params._replace(tables=tuple(
+                jnp.clip(t, -clip_table, clip_table) for t in params.tables))
+        return params, opt_state, loss, acc
+
+    return train_step
+
+
+def uleen_dist_specs(spec: UleenSpec, mesh, global_batch: int):
+    """NamedShardings for the executed distributed step: batch over every
+    mesh axis, params/opt/statics/rng replicated (the continuous ensemble
+    is ~MBs — batch is what scales, module docstring)."""
+    from jax.sharding import NamedSharding
+    axes = tuple(mesh.axis_names)
+    bspec = P(axes if len(axes) > 1 else axes[0])
+    rep = NamedSharding(mesh, P())
+    return dict(rep=rep,
+                bits=NamedSharding(mesh, bspec),
+                labels=NamedSharding(mesh, bspec))
 
 
 def uleen_cell_specs(spec: UleenSpec, mesh, *, global_batch: int = GLOBAL_BATCH):
@@ -289,6 +439,30 @@ def lower_uleen_sharded_infer_cell(mesh, *, global_batch: int = INFER_BATCH,
     with sh.use_mesh(mesh, sh.SERVE_RULES):
         fn = jax.jit(step, in_shardings=(shard["ptables"], shard["bits"]))
         lowered = fn.lower(ins["ptables"], ins["bits"])
+        return lowered.compile()
+
+
+def lower_uleen_dist_cell(mesh, *, global_batch: int = EXEC_BATCH,
+                          spec: UleenSpec = ULEEN_EXEC_SPEC,
+                          grad_blocks: int = 8, compress: bool = False,
+                          lr: float = 1e-3):
+    """AOT lower + compile the *executed* distributed train step on `mesh`
+    (the dryrun train_host_exec cell's memory/roofline artifact — the same
+    program `train.train_uleen` jits and actually runs)."""
+    optimizer = opt_lib.adam(lr)
+    step = make_uleen_dist_train_step(spec, optimizer, mesh,
+                                      grad_blocks=grad_blocks,
+                                      compress=compress)
+    ins, shard = uleen_cell_specs(spec, mesh, global_batch=global_batch)
+    opt_spec = jax.eval_shape(optimizer.init, ins["params"])
+    rep = sh.named_sharding(mesh, sh.TRAIN_RULES, ())
+    opt_shard = jax.tree.map(lambda _: rep, opt_spec)
+    with sh.use_mesh(mesh, sh.TRAIN_RULES):
+        fn = jax.jit(step, in_shardings=(
+            shard["params"], opt_shard, shard["statics"], shard["bits"],
+            shard["labels"], shard["rng"]), donate_argnums=(0, 1))
+        lowered = fn.lower(ins["params"], opt_spec, ins["statics"],
+                           ins["bits"], ins["labels"], ins["rng"])
         return lowered.compile()
 
 

@@ -71,13 +71,21 @@ def _prune(directory: str, keep: int) -> None:
 
 
 def all_steps(directory: str) -> list:
+    """Completed steps, ascending. Only trusts `step_<digits>` dirs with
+    the DONE marker — a stray `step_backup/` or half-written name must
+    degrade to "not a checkpoint", never crash the restore path of a
+    restarting worker."""
     if not os.path.isdir(directory):
         return []
     out = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and \
-                os.path.exists(os.path.join(directory, name, DONE)):
-            out.append(int(name.split("_")[1]))
+        if not name.startswith("step_"):
+            continue
+        suffix = name.split("_", 1)[1]
+        if not suffix.isdigit():
+            continue
+        if os.path.exists(os.path.join(directory, name, DONE)):
+            out.append(int(suffix))
     return sorted(out)
 
 

@@ -60,21 +60,23 @@ class StragglerMonitor:
 
     def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
                  warmup_steps: int = 3,
-                 on_straggler: Optional[Callable] = None):
+                 on_straggler: Optional[Callable] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.threshold = threshold
         self.alpha = alpha
         self.warmup = warmup_steps
         self.ewma: Optional[float] = None
         self.events: list = []
         self._on = on_straggler
+        self._clock = clock   # injectable: fault-drill tests feed a fake
         self._seen = 0
         self._t0: Optional[float] = None
 
     def start(self) -> None:
-        self._t0 = time.monotonic()
+        self._t0 = self._clock()
 
     def stop(self, step: int) -> Optional[StragglerEvent]:
-        dt = time.monotonic() - self._t0
+        dt = self._clock() - self._t0
         self._seen += 1
         ev = None
         if self.ewma is None:
