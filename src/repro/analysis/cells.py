@@ -40,6 +40,7 @@ ULEEN_CELLS = {
     "infer_mnist_scale": (uleen_cell.ULN_L_SPEC, "infer"),
     "infer_packed_scale": (uleen_cell.ULN_XL_SPEC, "infer"),
     "infer_sharded_scale": (uleen_cell.ULN_XL_ENSEMBLE_SPEC, "infer"),
+    "infer_multitenant_scale": (uleen_cell.ULN_S_SPEC, "infer"),
 }
 
 
@@ -78,6 +79,33 @@ def _coverage_thresholds(spec, mesh, batch: int) -> tuple:
         b_loc * spec.num_filters(sm) * sm.inputs_per_filter,   # tuples int8
         b_loc * m_loc * spec.num_filters(sm) * sm.num_hashes * 4,  # oracle
         b_loc * spec.total_bits,                               # bits shard
+    ) for sm in spec.submodels)
+    return float(big_param), float(3 * legit)
+
+
+def _mt_coverage_thresholds(spec, mesh, batch: int, tenants: int) -> tuple:
+    """(big_param_bytes, max_intermediate_bytes) for the multi-tenant
+    fleet cell. Every table leaf is tenant-sharded, so the threshold is
+    half the smallest *stacked* words plane's global bytes: a shard
+    arrives at global/degree (well under), a regression to replication at
+    full size (well over). The dominant legit per-device intermediate is
+    the (B_loc, N_f, k, M) int32 per-hash lookup tensor of the tenant
+    oracle (`kernels.ref.packed_wnn_tenant_ref`); the local bitcast
+    words view and the batch shard trail it."""
+    m = spec.num_classes
+    words_bytes = [tenants * m * spec.num_filters(sm)
+                   * word_count(sm.entries) * 4 for sm in spec.submodels]
+    big_param = min(words_bytes) // 2
+
+    _entry, deg = sh.tenant_partition(mesh, tenants, sh.SERVE_RULES)
+    t_loc = tenants // deg
+    batch_entry = sh.SERVE_RULES.resolve(("batch",), mesh, shape=(batch,))[0]
+    b_loc = batch // sh.spec_degree(mesh, batch_entry)
+    legit = max(max(
+        b_loc * spec.num_filters(sm) * sm.num_hashes * m * 4,     # lookups
+        b_loc * spec.num_filters(sm) * sm.inputs_per_filter * 4,  # perm rows
+        t_loc * m * spec.num_filters(sm) * word_count(sm.entries) * 4,
+        b_loc * spec.total_bits,                                  # bits shard
     ) for sm in spec.submodels)
     return float(big_param), float(3 * legit)
 
@@ -162,6 +190,33 @@ def uleen_cell_program(shape: str, mesh, *,
             mesh, global_batch=batch, spec=spec, backend=backend)
         # the int8-table cell deploys the fused (one-hot MXU) kernel
         prog.kernel_geometries = kernel_geometries(spec, batch, "fused")
+    elif shape == "infer_multitenant_scale":
+        tenants = uleen_cell.MULTITENANT_TENANTS
+        ins, _sh2 = uleen_cell.uleen_multitenant_infer_specs(
+            spec, mesh, tenants=tenants, global_batch=batch)
+        step = uleen_cell.make_uleen_multitenant_infer_step(
+            ins["st"], mesh, batch, backend=backend)
+        args = (ins["st"], ins["bits"], ins["tids"])
+        lower = lambda: uleen_cell.lower_uleen_multitenant_infer_cell(
+            mesh, tenants=tenants, global_batch=batch, spec=spec,
+            backend=backend)
+        prog.packed = True
+        # neither the per-tenant (M, N_f, E) table nor its stacked
+        # (T, M, N_f, E) fleet form may ever materialize
+        prog.unpacked_table_shapes = (
+            unpacked_table_shapes(spec)
+            | frozenset((tenants,) + s for s in
+                        unpacked_table_shapes(spec)))
+        prog.kernel_geometries = kernel_geometries(spec, batch, "packed")
+        _entry, degree = sh.tenant_partition(mesh, tenants,
+                                             sh.SERVE_RULES)
+        if degree > 1:   # a trivial mesh has nothing to cover
+            prog.sharded = True
+            # the ONE psum of ownership-masked partials (DESIGN §11)
+            prog.collective_budget = {"all-reduce": 1}
+            (prog.big_param_bytes,
+             prog.max_intermediate_bytes) = _mt_coverage_thresholds(
+                 spec, mesh, batch, tenants)
     else:
         packed_cell = shape == "infer_packed_scale"
         step = (uleen_cell.make_uleen_packed_infer_step(backend=backend)

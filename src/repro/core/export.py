@@ -231,6 +231,62 @@ def prepare_artifact(artifact: InferenceArtifact, *, backend: str = "auto",
     return prep
 
 
+def prepare_tenants(artifacts, *, backend: str = "auto",
+                    mesh=None, rules=None):
+    """Hoisted, cached multi-artifact prep: one `StackedPackedTables`
+    fleet over N same-geometry artifacts (DESIGN §11).
+
+    Packed-domain only (backend "packed"/"auto") — an int8 fleet would
+    multiply the 32× expansion by T, exactly what the packed runtime
+    exists to avoid. Each artifact's single-tenant prep goes through the
+    `prepare_artifact` cache first (so a tenant already served solo costs
+    nothing to re-prepare), then the slices stack with trace-time
+    geometry validation (`packed.stack_tenants`).
+
+    Memoization mirrors `prepare_artifact`'s per-(backend, mesh) scheme,
+    keyed on the *first* artifact's `_prepared` dict with the identity
+    tuple of the whole fleet (same artifact objects in the same order ->
+    cache hit; the cached value holds a strong reference to the artifact
+    tuple so the ids stay valid). With `mesh` the stacked leaves are
+    device_put partitioned over it by tenant (`tenant_shardings` — every
+    model shard holds T/degree whole tenants; replication fallback when
+    T does not divide the axis).
+    """
+    from repro import packed
+    from repro.kernels import ops
+    ops.resolve_wnn_backend(backend)
+    if backend not in ("auto", "packed"):
+        raise ValueError(
+            f"prepare_tenants serves the packed domain only (backend="
+            f"'packed'|'auto', got {backend!r})")
+    artifacts = tuple(artifacts)
+    if not artifacts:
+        raise ValueError("prepare_tenants needs at least one artifact")
+    cache = getattr(artifacts[0], "_prepared", None)
+    if cache is None:
+        cache = artifacts[0]._prepared = {}
+    ids = tuple(id(a) for a in artifacts)
+    if mesh is not None:
+        from repro.dist import sharding as sh
+        rules = rules if rules is not None else sh.SERVE_RULES
+        rules_key = tuple(sorted(
+            (k, tuple(v)) for k, v in rules.rules.items()))
+        key = ("tenants", ids, mesh, rules_key)
+    else:
+        key = ("tenants", ids)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit[0]
+    stacked = packed.stack_tenants(
+        prepare_artifact(a, backend=backend) for a in artifacts)
+    if mesh is not None:
+        import jax
+        stacked = jax.device_put(
+            stacked, stacked.tenant_shardings(mesh, rules))
+    cache[key] = (stacked, artifacts)   # pin the ids the key ranges over
+    return stacked
+
+
 def scores_from_prep(prep, bits: jnp.ndarray, *,
                      backend: str = "auto") -> jnp.ndarray:
     """Backend-dispatched scores from prepared tables (jit-traceable).

@@ -107,6 +107,8 @@ TRAIN_RULES = ShardingRules(rules={
     "expert_ffn": ("model",),     # only when "experts" could not take it
     "classes": (),                # WNN discriminators: the continuous
                                   # training ensemble is tiny — replicate
+    "tenants": (),                # training is single-tenant; the stacked
+                                  # serve fleet is where the axis shards
 })
 
 # Serving: decode works one token at a time, so the KV ring buffer is the
@@ -116,11 +118,17 @@ TRAIN_RULES = ShardingRules(rules={
 # discriminators are fully independent until the final argmax (DESIGN §7),
 # so the (M, N_f, E) tables partition on M with zero cross-device traffic
 # until the (B, M) score gather.
+# Multi-tenant fleets ("tenants", DESIGN §11) shard the stacked-artifact
+# leading axis over `model` the same way: whole tenants are fully
+# independent, so the only cross-device step is the single psum of the
+# ownership-masked per-row scores. No-reuse means a cell sharding tenants
+# leaves classes replicated (each tenant is KB-scale — that is the point).
 SERVE_RULES = ShardingRules(rules={
     **TRAIN_RULES.rules,
     "kv_heads": (),
     "cache_seq": ("model",),
     "classes": ("model",),
+    "tenants": ("model",),
 })
 
 
@@ -148,6 +156,21 @@ def class_partition(mesh, num_classes: int,
     """
     rules = rules if rules is not None else SERVE_RULES
     entry = rules.resolve(("classes",), mesh, shape=(num_classes,))[0]
+    return entry, spec_degree(mesh, entry)
+
+
+def tenant_partition(mesh, num_tenants: int,
+                     rules: Optional[ShardingRules] = None):
+    """Resolve the `tenants` logical axis for a T-artifact stacked fleet.
+
+    The multi-tenant twin of `class_partition`: returns `(entry, degree)`
+    — the PartitionSpec entry the tenant dimension takes on `mesh` and the
+    resulting shard count, falling back to replication `(None, 1)` when T
+    does not divide the mesh axis (divisibility sanitizer), so the
+    resolved spec is always a valid in_sharding.
+    """
+    rules = rules if rules is not None else SERVE_RULES
+    entry = rules.resolve(("tenants",), mesh, shape=(num_tenants,))[0]
     return entry, spec_degree(mesh, entry)
 
 

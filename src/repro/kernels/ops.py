@@ -168,6 +168,72 @@ def wnn_scores(tuples, params, table, mask, bias, *, backend: str = "auto",
     return ref.fused_wnn_ref(tuples, params, table, mask, bias)
 
 
+def validate_tenant_geometry(bits, tids, perms, params, words, mask, *,
+                             entries: int) -> None:
+    """Trace-time validation for the tenant-indexed packed entry: every
+    per-tenant leaf must carry the same leading T, tenant 0's slice must
+    be a legal packed geometry, and the batch/tid shapes must agree."""
+    if bits.ndim != 2:
+        raise ValueError(f"bits must be (B, total_bits), got {bits.shape}")
+    if tids.ndim != 1 or tids.shape[0] != bits.shape[0]:
+        raise ValueError(
+            f"tids must be (B,)=({bits.shape[0]},), got {tids.shape}")
+    if not jnp.issubdtype(tids.dtype, jnp.integer):
+        raise ValueError(f"tids must be integer, got {tids.dtype}")
+    if words.ndim != 4:
+        raise ValueError(
+            f"stacked words must be (T, M, N_f, W), got {words.shape}")
+    t = words.shape[0]
+    for name, leaf, nd in (("perms", perms, 3), ("params", params, 3),
+                           ("mask", mask, 3)):
+        if leaf.ndim != nd or leaf.shape[0] != t:
+            raise ValueError(
+                f"stacked {name} must have leading T={t} and {nd} dims, "
+                f"got {leaf.shape}")
+    # tenant 0's slice must be a legal single-tenant geometry; T-uniform
+    # ndarray slices make one check cover every tenant
+    n_f, n = perms.shape[1], perms.shape[2]
+    sds = jax.ShapeDtypeStruct
+    validate_wnn_geometry(
+        sds((bits.shape[0], n_f, n), jnp.int8),
+        sds(params.shape[1:], jnp.int32), sds(words.shape[1:], words.dtype),
+        sds(mask.shape[1:], mask.dtype), sds((words.shape[1],), jnp.int32),
+        entries=entries)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "entries"))
+def wnn_scores_tenant(bits, tids, perms, params, words, mask, *,
+                      backend: str = "auto", entries: int = 0):
+    """One submodel's tenant-indexed scores (B, M) int32 (DESIGN §11).
+
+    bits: (B, total_bits) {0,1}; tids: (B,) int32 tenant index per row;
+    perms: (T, N_f, n) int32; params: (T, k, n) int32; words:
+    (T, M, N_f, W) uint32 bitplanes; mask: (T, M, N_f) int8. Returns the
+    partial scores WITHOUT bias (the accumulator adds the per-tenant
+    bias, mirroring how `packed.packed_scores` owns its constraints).
+
+    Packed-domain only: backend must be "packed" or "auto" — the int8
+    backends would need T copies of the 32× expansion this runtime
+    exists to avoid. Both resolve to the row-gather XLA formulation
+    (`ref.packed_wnn_tenant_ref`) on every platform: the gathers are
+    already the memory-bound optimum and a dedicated Mosaic tenant
+    kernel is future work (the vmem-budget rule still covers the
+    per-tenant geometry each row exercises).
+
+    Like `wnn_scores`, this is an inner `jax.jit` keyed on avals only —
+    it must never capture the thread-local `use_mesh` context; sharding
+    constraints and manual collectives live in the (uncached) callers.
+    """
+    if backend not in ("packed", "auto"):
+        raise ValueError(
+            f"wnn_scores_tenant serves the packed domain only (backend="
+            f"'packed'|'auto', got {backend!r}); stacked fleets never "
+            "materialize int8 tables")
+    validate_tenant_geometry(bits, tids, perms, params, words, mask,
+                             entries=entries)
+    return ref.packed_wnn_tenant_ref(bits, tids, perms, params, words, mask)
+
+
 def ensemble_predict(scores):
     """Gathered (B, M) score matrix + argmax predictions (B,) int32.
 

@@ -50,6 +50,49 @@ def packed_wnn_ref(tuples: jnp.ndarray, params: jnp.ndarray,
     return jnp.sum(resp, axis=-1) + bias.astype(jnp.int32)[None, :]
 
 
+def packed_wnn_tenant_ref(bits: jnp.ndarray, tids: jnp.ndarray,
+                          perms: jnp.ndarray, params: jnp.ndarray,
+                          words: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Tenant-indexed packed-domain oracle (DESIGN §11): every batch row
+    carries a tenant id and is scored against THAT tenant's stacked
+    tables — permutation, H3 parameters, word plane and mask are all
+    row-gathered, so one fixed-shape program serves the whole fleet.
+
+    bits: (B, total_bits) int/bool {0,1}; tids: (B,) int32 in [0, T);
+    perms: (T, N_f, n) int32; params: (T, k, n) int32; words:
+    (T, M, N_f, W) uint32 bitplanes; mask: (T, M, N_f) int8.
+    Returns (B, M) int32 partial scores (no bias — the accumulator owns
+    the per-tenant bias add, like `packed_wnn_ref`'s callers own theirs).
+
+    Row r is exactly score-equal to `packed_wnn_ref` on tenant tids[r]'s
+    slice: same XOR-fold, same word gather, same shift/AND bit extract,
+    same int32 AND-over-k/mask/sum — only the indexing is per-row.
+    """
+    b = bits.shape[0]
+    t, m, n_f, w_cnt = words.shape
+    n = perms.shape[-1]
+    perm_row = perms[tids]                                     # (B, N_f, n)
+    tuples = jnp.take_along_axis(
+        bits.astype(jnp.int8), perm_row.reshape(b, n_f * n),
+        axis=1).reshape(b, n_f, n)
+    h3_row = params[tids].astype(jnp.int32)                    # (B, k, n)
+    sel = jnp.where(tuples[:, :, None, :] != 0, h3_row[:, None], 0)
+    hashes = jax.lax.reduce(sel, jnp.int32(0), jax.lax.bitwise_xor,
+                            [sel.ndim - 1])                    # (B, N_f, k)
+    words_i32 = jax.lax.bitcast_convert_type(words, jnp.int32)
+    # flatten (T, M, N_f, W) -> (T*N_f*W, M) so one gather fetches each
+    # row's addressed word for every class at once
+    wt = words_i32.transpose(0, 2, 3, 1).reshape(t * n_f * w_cnt, m)
+    rows = (tids[:, None, None] * n_f
+            + jnp.arange(n_f, dtype=jnp.int32)[None, :, None]
+            ) * w_cnt + (hashes >> 5)
+    vals = (wt[rows] >> (hashes & 31)[..., None]) & 1          # (B, N_f, k, M)
+    resp = jnp.min(vals, axis=2)                               # AND for {0,1}
+    # survive iff nonzero (core/bloom.py::apply_mask semantics)
+    surv = (mask[tids] != 0).astype(jnp.int32)                 # (B, M, N_f)
+    return jnp.sum(resp.transpose(0, 2, 1) * surv, axis=-1)
+
+
 def thermometer_ref(x: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
     return (x[:, :, None] > thresholds[None]).astype(jnp.int8)
 

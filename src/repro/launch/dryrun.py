@@ -41,7 +41,8 @@ from repro.train import optimizer as opt_lib
 # distributed multi-shot run on an 8-device (pod=2, data=4) sub-mesh with a
 # bit-exact parity probe against the single-device reference (DESIGN §10).
 ULEEN_SHAPES = ("train_mnist_scale", "train_host_exec", "infer_mnist_scale",
-                "infer_packed_scale", "infer_sharded_scale")
+                "infer_packed_scale", "infer_sharded_scale",
+                "infer_multitenant_scale")
 
 
 def lower_cell(cfg, shape, mesh, *, extra_flags: dict | None = None):
@@ -261,7 +262,12 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
     shape="infer_sharded_scale" lowers the class-sharded serve step — the
     ULN-XL ensemble's packed tables partitioned over `model` by class,
     batch over (pod, data), final argmax over the gathered (B, M) score
-    matrix (DESIGN §7) — and records per-device vs replicated table bytes.
+    matrix (DESIGN §7) — and records per-device vs replicated table bytes;
+    shape="infer_multitenant_scale" lowers the tenant-sharded fleet step —
+    MULTITENANT_TENANTS stacked ULN-S artifacts partitioned over `model`
+    by tenant, one ownership-masked psum, one compiled scores launch for
+    the whole fleet (DESIGN §11) — and records per-tenant/per-device fleet
+    bytes.
     """
     from repro.launch import uleen_cell
     if shape not in ULEEN_SHAPES:
@@ -273,7 +279,9 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
     infer = shape != "train_mnist_scale"
     packed_cell = shape == "infer_packed_scale"
     sharded_cell = shape == "infer_sharded_scale"
-    arch_tag = ("uleen_uln_xl_ens" if sharded_cell
+    multitenant_cell = shape == "infer_multitenant_scale"
+    arch_tag = ("uleen_uln_s_fleet" if multitenant_cell
+                else "uleen_uln_xl_ens" if sharded_cell
                 else "uleen_uln_xl" if packed_cell else "uleen_uln_l")
     tag = f"{arch_tag}.{shape}.{'pod2' if multi_pod else 'pod1'}"
     if infer:
@@ -284,14 +292,18 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
     # rows do, so backend comparisons aren't read off emulation.
     from repro.kernels import ops as wnn_ops
     resolved = wnn_ops.resolve_wnn_backend(
-        backend, packed_tables=packed_cell or sharded_cell)
+        backend,
+        packed_tables=packed_cell or sharded_cell or multitenant_cell)
     on_tpu = jax.default_backend() == "tpu"
     kernel_mode = ("mosaic" if resolved in ("fused", "packed") and on_tpu
                    else "interpret" if backend in ("fused", "packed")
                    else "xla")
     try:
         t0 = time.time()
-        if sharded_cell:
+        if multitenant_cell:
+            compiled = uleen_cell.lower_uleen_multitenant_infer_cell(
+                mesh, backend=backend)
+        elif sharded_cell:
             compiled = uleen_cell.lower_uleen_sharded_infer_cell(
                 mesh, backend=backend)
         elif packed_cell:
@@ -305,7 +317,8 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
-        spec = (uleen_cell.ULN_XL_ENSEMBLE_SPEC if sharded_cell
+        spec = (uleen_cell.ULN_S_SPEC if multitenant_cell
+                else uleen_cell.ULN_XL_ENSEMBLE_SPEC if sharded_cell
                 else uleen_cell.ULN_XL_SPEC if packed_cell
                 else uleen_cell.ULN_L_SPEC)
         # "model flops" for a WNN: paper-style op count (hash XORs + k
@@ -339,6 +352,48 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
             },
             "roofline": roof.summary(),
         }
+        if multitenant_cell:
+            # The point of the cell (DESIGN §11): N-thousand KB-scale
+            # artifacts fit because the stacked fleet partitions over
+            # `model` by tenant — per-device fleet bytes must fall to
+            # global/degree, checked against the MEASURED per-device
+            # argument bytes so a regression to replication (or a
+            # per-tenant recompile creeping back in) blows the bound.
+            import math
+            tenants = uleen_cell.MULTITENANT_TENANTS
+            entry, degree = sh.tenant_partition(mesh, tenants,
+                                                sh.SERVE_RULES)
+            st_spec = uleen_cell.stacked_table_specs(spec, tenants)
+            fleet_bytes = sum(
+                math.prod(l.shape) * l.dtype.itemsize
+                for l in jax.tree.leaves(st_spec))
+            batch_entry = sh.SERVE_RULES.resolve(
+                ("batch",), mesh, shape=(uleen_cell.INFER_BATCH,))[0]
+            b_loc = (uleen_cell.INFER_BATCH
+                     // sh.spec_degree(mesh, batch_entry))
+            bits_bytes = b_loc * spec.total_bits + b_loc * 4  # + tids
+            record["tenancy"] = {
+                "tenants": tenants,
+                "tenant_axis": entry if entry is None
+                or isinstance(entry, str) else list(entry),
+                "tenant_shards": degree,
+                "tenants_per_device": tenants // degree,
+                "words_bytes_per_tenant": st_spec.table_bytes() // tenants,
+                "fleet_bytes_global": fleet_bytes,
+                "fleet_bytes_per_device": fleet_bytes // degree,
+                "args_bytes_per_device_measured":
+                    mem.argument_size_in_bytes,
+            }
+            assert degree > 1, (
+                "tenant sharding fell back to replication on the "
+                "production mesh — the multitenant-scale cell must "
+                "partition the fleet")
+            assert mem.argument_size_in_bytes <= (
+                fleet_bytes // degree + bits_bytes + (4 << 20)), (
+                f"measured args {mem.argument_size_in_bytes} B/device "
+                f"exceed fleet shard ({fleet_bytes // degree} B) + batch "
+                f"shard ({bits_bytes} B): the in_shardings did not "
+                "actually partition the stacked tables")
         if sharded_cell:
             # The point of the cell (DESIGN §7): per-device table bytes
             # must fall to replicated/degree, degree = the class-shard
@@ -385,6 +440,12 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
                           f" MiB (replicated "
                           f"{s['table_bytes_replicated'] / 2**20:.2f} MiB, "
                           f"{s['class_shards']} class shards)")
+        if multitenant_cell:
+            t = record["tenancy"]
+            shard_note = (f" fleet={t['tenants']} tenants, "
+                          f"{t['fleet_bytes_per_device'] / 2**20:.2f} "
+                          f"MiB/device ({t['tenant_shards']} tenant shards"
+                          f", {t['tenants_per_device']} tenants each)")
         print(f"[dryrun] {tag}: OK compile={record['compile_s']}s "
               f"peak={record['memory']['peak_gib']:.2f} GiB/chip "
               f"terms(c/m/coll)={roofs['compute_s']:.3e}/"

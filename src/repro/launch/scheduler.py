@@ -75,7 +75,10 @@ class RequestResult:
     t_submit: float
     t_admit: float = 0.0
     t_first: float = 0.0               # first token (end of prefill)
-    t_done: float = 0.0
+    # None = still in flight. A sentinel, NOT 0.0: with an injected clock a
+    # request can legitimately finish at time 0.0, and stats() filters on
+    # `is not None` — a falsy-but-real timestamp must still count.
+    t_done: Optional[float] = None
 
     @property
     def latency(self) -> float:
@@ -84,6 +87,18 @@ class RequestResult:
     @property
     def queue_wait(self) -> float:
         return self.t_admit - self.t_submit
+
+
+def _median(sorted_vals) -> float:
+    """Proper p50 of an ascending sequence: the middle element for odd
+    lengths, the mean of the two middle elements for even lengths —
+    `vals[len // 2]` alone is the *upper* middle, biased high on every
+    even-sized sample."""
+    n = len(sorted_vals)
+    mid = n // 2
+    if n % 2:
+        return sorted_vals[mid]
+    return 0.5 * (sorted_vals[mid - 1] + sorted_vals[mid])
 
 
 @dataclasses.dataclass
@@ -327,9 +342,19 @@ class Engine:
         return [self.results[rid] for rid in sorted(self.results)]
 
     def stats(self) -> dict:
-        done = [r for r in self.results.values() if r.t_done]
+        """Aggregate serving stats. The key set is STABLE: every key is
+        present on an empty engine too (latencies as None, counters as 0)
+        — downstream consumers (scenario harness, nightly diff) index the
+        schema unconditionally, so it must never shrink with traffic."""
+        done = [r for r in self.results.values() if r.t_done is not None]
         if not done:
-            return {"requests": 0}
+            return {
+                "requests": 0, "tokens": 0, "tok_per_s": 0.0,
+                "latency_mean_s": None, "latency_p50_s": None,
+                "latency_max_s": None, "queue_wait_mean_s": None,
+                "decode_steps": self.step_count,
+                "peak_active": self.peak_active,
+            }
         lat = sorted(r.latency for r in done)
         toks = sum(len(r.tokens) for r in done)
         span = max(r.t_done for r in done) - min(r.t_submit for r in done)
@@ -338,7 +363,7 @@ class Engine:
             "tokens": toks,
             "tok_per_s": toks / span if span > 0 else float("inf"),
             "latency_mean_s": sum(lat) / len(lat),
-            "latency_p50_s": lat[len(lat) // 2],
+            "latency_p50_s": _median(lat),
             "latency_max_s": lat[-1],
             "queue_wait_mean_s": sum(r.queue_wait for r in done) / len(done),
             "decode_steps": self.step_count,
@@ -353,7 +378,7 @@ class WnnResult:
     scores: np.ndarray                 # (M,) int32 ensemble scores
     pred: int
     t_submit: float
-    t_done: float = 0.0
+    t_done: Optional[float] = None     # None = queued; see RequestResult
 
     @property
     def latency(self) -> float:
@@ -482,18 +507,337 @@ class WnnBatcher:
         return [self.results[rid] for rid in sorted(self.results)]
 
     def stats(self) -> dict:
-        done = [r for r in self.results.values() if r.t_done]
+        """Batch-serving stats; stable key set (latencies None when
+        nothing finished yet — the schema never shrinks, like
+        `Engine.stats`)."""
+        done = [r for r in self.results.values() if r.t_done is not None]
         occupancy = self.served / max(1, self.batches * self.slots)
         out = {"requests": len(done), "batches": self.batches,
                "submitted": self._next_rid, "served": self.served,
                "queued": len(self.queue),
                "class_shards": self.class_shards,
                "occupancy": occupancy,
-               "traces": int(self.trace_counts["batch_scores"])}
+               "traces": int(self.trace_counts["batch_scores"]),
+               "latency_p50_s": None, "latency_max_s": None}
         if done:
             lat = sorted(r.latency for r in done)
-            out["latency_p50_s"] = lat[len(lat) // 2]
+            out["latency_p50_s"] = _median(lat)
             out["latency_max_s"] = lat[-1]
+        return out
+
+
+@dataclasses.dataclass
+class WnnTenantResult:
+    """One served multi-tenant classification request."""
+    rid: int
+    tid: int                           # tenant the request was routed to
+    scores: np.ndarray                 # (M,) int32 ensemble scores
+    pred: int
+    t_submit: float
+    t_done: Optional[float] = None     # None = queued; see RequestResult
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class WnnTenantBatcher:
+    """Tenant-routed micro-batching over a fleet of same-geometry WNN
+    artifacts (DESIGN §11) — `WnnBatcher` grown a tenant axis.
+
+    Thousands of KB-scale artifacts register via `add_tenant`; at most
+    `capacity` of them are *resident* at once in one device-side
+    `StackedPackedTables` cache (`packed.stacked_zeros` slots). Requests
+    carry a tenant id; each `step()` routes up to `slots` of them through
+    ONE fixed-shape `stacked_predict` launch — the batch rows index their
+    tenant's tables by slot id, so neither admission depth nor WHICH
+    tenants are in the batch ever changes the compiled program
+    (`trace_counts["batch_scores"]` pins exactly one trace, like
+    `WnnBatcher`; slot installs are one more fixed-shape program).
+
+    Admission/eviction is LRU: a request for a non-resident tenant
+    installs that tenant's prepared tables (`core.export.prepare_artifact`
+    — cached, so a tenant re-admitted after eviction never re-packs) into
+    the least-recently-used slot whose tenant is not referenced by the
+    current batch. When every slot is pinned by the batch being formed,
+    the request defers to the queue head for the next step — so a batch
+    can never need more distinct tenants than `capacity`, and `drain()`
+    always terminates (the first request of a step always admits).
+
+    With `mesh` the batch shards over the mesh's batch axes while the
+    resident stack replicates — per-tenant tables are KB-scale, which is
+    the point; the *static* N-thousand-tenant fleet partitioned over
+    `model` is the dryrun cell's regime (`uleen_cell.
+    lower_uleen_multitenant_infer_cell`), not the hot-cache batcher's.
+
+        batcher = WnnTenantBatcher(capacity=64, slots=32)
+        tid = batcher.add_tenant(artifact)
+        rid = batcher.submit(tid, encoded_bits_row)
+        results = batcher.drain()      # -> [WnnTenantResult]
+    """
+
+    def __init__(self, *, capacity: int = 64, slots: int = 64,
+                 backend: str = "auto", mesh=None, clock: Callable = None):
+        if capacity < 1:
+            raise ValueError("need capacity >= 1")
+        if slots < 1:
+            raise ValueError("need slots >= 1")
+        if backend not in ("packed", "auto"):
+            raise ValueError(
+                f"the tenant batcher serves the packed domain only "
+                f"(backend='packed'|'auto', got {backend!r})")
+        self.capacity = capacity
+        self.slots = slots
+        self.backend = backend
+        self.mesh = mesh
+        self.rules = sh.SERVE_RULES
+        self.clock = clock or time.perf_counter
+        self.trace_counts: collections.Counter = collections.Counter()
+
+        self.total_bits: Optional[int] = None
+        self._tenants: list = []           # tid -> prepared PackedTables
+        self._artifacts: list = []         # keep prep cache owners alive
+        self._stack = None                 # device StackedPackedTables
+        self._resident: dict = {}          # tid -> slot
+        self._slot_tid: list = [None] * capacity
+        self._lru: collections.OrderedDict = collections.OrderedDict()
+        self._scores = None
+        self._install = None
+        self._bits_sharding = None
+        self._sids_sharding = None
+
+        self.queue: collections.deque = collections.deque()
+        self.results: dict = {}
+        self._next_rid = 0
+        self.batches = 0
+        self.served = 0
+        self.admissions = 0
+        self.evictions = 0
+        self.hits = 0
+        self.misses = 0
+        self.per_tenant: dict = {}
+
+    # -- fleet registry -----------------------------------------------------
+
+    def add_tenant(self, artifact) -> int:
+        """Register one artifact; returns its tenant id. The first tenant
+        fixes the fleet geometry — later artifacts must match it exactly
+        (entries, classes, per-submodel shapes), the same trace-time
+        guarantee `packed.stack_tenants` enforces."""
+        from repro.core import export as export_mod
+        from repro.packed import layout
+        prep = export_mod.prepare_artifact(artifact, backend=self.backend)
+        if self._stack is None:
+            self.total_bits = int(artifact.total_bits)
+            self._build(prep)
+        else:
+            tmpl = self._tenants[0]
+            if (prep.entries != tmpl.entries
+                    or prep.num_classes != tmpl.num_classes
+                    or int(artifact.total_bits) != self.total_bits
+                    or any(a.shape != b.shape for a, b in
+                           zip(prep.words, tmpl.words))
+                    or any(a.shape != b.shape for a, b in
+                           zip(prep.perms, tmpl.perms))):
+                raise ValueError(
+                    f"tenant {len(self._tenants)} geometry does not match "
+                    f"the fleet's (entries {prep.entries} vs {tmpl.entries}, "
+                    f"M {prep.num_classes} vs {tmpl.num_classes}) — stacked "
+                    "tenants must share geometry")
+        tid = len(self._tenants)
+        self._tenants.append(prep)
+        self._artifacts.append(artifact)
+        self.per_tenant[tid] = {"requests": 0, "batches": 0, "lat": []}
+        return tid
+
+    def _build(self, template):
+        """One-time device cache + compiled-program construction, driven
+        by the first tenant's geometry."""
+        from repro.packed import layout, runtime
+        backend = self.backend
+        stack = layout.stacked_zeros(template, self.capacity)
+
+        def _batch_scores(st, bits, sids):
+            self.trace_counts["batch_scores"] += 1
+            # slot-indexed fleet scoring — THE serve loop of the stacked
+            # path, shared with the dryrun cell via stacked_predict
+            scores, _ = runtime.stacked_predict(st, bits, sids,
+                                                backend=backend)
+            return scores
+
+        def _install(st, pt, slot):
+            self.trace_counts["install"] += 1
+            return layout.StackedPackedTables(
+                words=tuple(w.at[slot].set(v)
+                            for w, v in zip(st.words, pt.words)),
+                masks=tuple(m.at[slot].set(v)
+                            for m, v in zip(st.masks, pt.masks)),
+                perms=tuple(p.at[slot].set(v)
+                            for p, v in zip(st.perms, pt.perms)),
+                h3s=tuple(h.at[slot].set(v)
+                          for h, v in zip(st.h3s, pt.h3s)),
+                bias=st.bias.at[slot].set(pt.bias),
+                entries=st.entries, num_classes=st.num_classes,
+                num_tenants=st.num_tenants)
+
+        self._install = jax.jit(_install, donate_argnums=(0,))
+        if self.mesh is None:
+            self._stack = stack
+            self._scores = jax.jit(_batch_scores)
+        else:
+            rep = sh.named_sharding(self.mesh, self.rules, ())
+            self._stack = jax.device_put(
+                stack, jax.tree.map(lambda _: rep, stack))
+            self._bits_sharding = sh.named_sharding(
+                self.mesh, self.rules, ("batch", None),
+                shape=(self.slots, self.total_bits))
+            self._sids_sharding = sh.named_sharding(
+                self.mesh, self.rules, ("batch",), shape=(self.slots,))
+            self._scores = jax.jit(
+                _batch_scores,
+                in_shardings=(jax.tree.map(lambda _: rep, stack),
+                              self._bits_sharding, self._sids_sharding))
+
+    # -- serving ------------------------------------------------------------
+
+    def submit(self, tid: int, bits) -> int:
+        """Queue one encoded input for tenant `tid`; returns its rid."""
+        if not 0 <= tid < len(self._tenants):
+            raise ValueError(
+                f"unknown tenant {tid}; registered: {len(self._tenants)}")
+        bits = np.asarray(bits).reshape(-1)
+        if bits.shape[0] != self.total_bits:
+            raise ValueError(f"request has {bits.shape[0]} bits, the fleet "
+                             f"encodes {self.total_bits}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.results[rid] = WnnTenantResult(rid=rid, tid=tid, scores=None,
+                                            pred=-1,
+                                            t_submit=self.clock())
+        self.queue.append((rid, tid, bits.astype(np.uint8)))
+        return rid
+
+    def _admit(self, tid: int, batch_tenants: set) -> Optional[int]:
+        """Install tenant `tid` into a slot: a free one, else the LRU
+        resident not pinned by the forming batch. None when every slot is
+        pinned (caller defers the request)."""
+        free = [s for s, t in enumerate(self._slot_tid) if t is None]
+        if free:
+            slot = free[0]
+        else:
+            victim = next((t for t in self._lru if t not in batch_tenants),
+                          None)
+            if victim is None:
+                return None
+            slot = self._resident.pop(victim)
+            del self._lru[victim]
+            self.evictions += 1
+        self._stack = self._install(self._stack, self._tenants[tid],
+                                    jnp.asarray(slot, jnp.int32))
+        self._slot_tid[slot] = tid
+        self._resident[tid] = slot
+        self.admissions += 1
+        return slot
+
+    def step(self) -> int:
+        """Serve up to `slots` queued requests in one fixed-shape launch,
+        admitting/evicting tenants as needed; returns the number served.
+        Requests whose tenant cannot be made resident alongside this
+        batch's tenants defer (in order) to the queue head."""
+        if not self.queue:
+            return 0
+        take: list = []
+        deferred: list = []
+        batch_tenants: set = set()
+        while self.queue and len(take) < self.slots:
+            rid, tid, bits = self.queue.popleft()
+            slot = self._resident.get(tid)
+            if slot is not None:
+                self.hits += 1
+            else:
+                slot = self._admit(tid, batch_tenants)
+                if slot is None:
+                    # deferred, not a miss: the retry re-decides, so
+                    # hits + misses always equals requests served
+                    deferred.append((rid, tid, bits))
+                    continue
+                self.misses += 1
+            batch_tenants.add(tid)
+            take.append((rid, tid, bits, slot))
+        for item in reversed(deferred):
+            self.queue.appendleft(item)
+
+        batch = np.zeros((self.slots, self.total_bits), np.uint8)
+        sids = np.zeros((self.slots,), np.int32)
+        for i, (_rid, _tid, bits, slot) in enumerate(take):
+            batch[i] = bits
+            sids[i] = slot
+        if self.mesh is None:
+            scores = np.asarray(self._scores(
+                self._stack, jnp.asarray(batch), jnp.asarray(sids)))
+        else:
+            with sh.use_mesh(self.mesh, self.rules):
+                scores = np.asarray(self._scores(
+                    self._stack,
+                    jax.device_put(batch, self._bits_sharding),
+                    jax.device_put(sids, self._sids_sharding)))
+        t = self.clock()
+        for i, (rid, tid, _bits, _slot) in enumerate(take):
+            res = self.results[rid]
+            res.scores = scores[i]
+            res.pred = int(np.argmax(scores[i]))
+            res.t_done = t
+            pt = self.per_tenant[tid]
+            pt["requests"] += 1
+            pt["lat"].append(res.latency)
+        for tid in batch_tenants:
+            self.per_tenant[tid]["batches"] += 1
+            self._lru[tid] = None
+            self._lru.move_to_end(tid)    # most recently used -> tail
+        self.batches += 1
+        self.served += len(take)
+        return len(take)
+
+    def drain(self) -> List[WnnTenantResult]:
+        """Serve until the queue is empty; results in rid order."""
+        while self.queue:
+            self.step()
+        return [self.results[rid] for rid in sorted(self.results)]
+
+    def stats(self) -> dict:
+        """Fleet-serving stats; stable key set (latencies None when
+        nothing finished — the schema never shrinks), plus a per-tenant
+        breakdown: requests, latency mean/p50, launches the tenant rode
+        in, and its occupancy share of total launch capacity."""
+        done = [r for r in self.results.values() if r.t_done is not None]
+        out = {"requests": len(done), "batches": self.batches,
+               "submitted": self._next_rid, "served": self.served,
+               "queued": len(self.queue),
+               "tenants": len(self._tenants),
+               "capacity": self.capacity,
+               "resident": len(self._resident),
+               "admissions": self.admissions,
+               "evictions": self.evictions,
+               "hits": self.hits, "misses": self.misses,
+               "occupancy": self.served / max(1, self.batches * self.slots),
+               "traces": int(self.trace_counts["batch_scores"]),
+               "install_traces": int(self.trace_counts["install"]),
+               "latency_p50_s": None, "latency_max_s": None,
+               "per_tenant": {}}
+        if done:
+            lat = sorted(r.latency for r in done)
+            out["latency_p50_s"] = _median(lat)
+            out["latency_max_s"] = lat[-1]
+        cap = max(1, self.batches * self.slots)
+        for tid, pt in self.per_tenant.items():
+            lat = sorted(pt["lat"])
+            out["per_tenant"][tid] = {
+                "requests": pt["requests"],
+                "batches": pt["batches"],
+                "occupancy": pt["requests"] / cap,
+                "latency_mean_s": sum(lat) / len(lat) if lat else None,
+                "latency_p50_s": _median(lat) if lat else None,
+            }
         return out
 
 

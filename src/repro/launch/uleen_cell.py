@@ -71,6 +71,23 @@ ULN_XL_ENSEMBLE_SPEC = UleenSpec(
                SubmodelSpec(32, 15)),
     bits_per_input=8, dropout_shared_classes=True)
 
+# ULN-S: the paper's smallest MNIST ensemble — the KB-scale artifact the
+# multi-tenant fleet stacks by the thousand (DESIGN §11). 784 px × 2
+# thermometer bits, 3 submodels, E=64: ~24 KiB of packed words per
+# tenant, so even 2048 tenants are ~50 MiB of global tables (~3 MiB per
+# device at 16-way `model` sharding) — tenancy, not size, is what this
+# cell scales.
+ULN_S_SPEC = UleenSpec(
+    num_classes=10, total_bits=784 * 2,
+    submodels=(SubmodelSpec(12, 6), SubmodelSpec(16, 6),
+               SubmodelSpec(20, 6)),
+    bits_per_input=2, dropout_shared_classes=True)
+
+# Fleet size of the infer_multitenant_scale cell: ≥1024 per the roadmap
+# acceptance bar, divisible by the production `model` degree (16) and the
+# CI lint mesh's (4).
+MULTITENANT_TENANTS = 2048
+
 
 def make_uleen_train_step(spec: UleenSpec, optimizer: opt_lib.Optimizer):
     def train_step(params, opt_state, statics, bits, labels, rng):
@@ -439,6 +456,84 @@ def lower_uleen_sharded_infer_cell(mesh, *, global_batch: int = INFER_BATCH,
     with sh.use_mesh(mesh, sh.SERVE_RULES):
         fn = jax.jit(step, in_shardings=(shard["ptables"], shard["bits"]))
         lowered = fn.lower(ins["ptables"], ins["bits"])
+        return lowered.compile()
+
+
+def stacked_table_specs(spec: UleenSpec, tenants: int):
+    """Abstract `StackedPackedTables` (ShapeDtypeStructs): `tenants`
+    same-geometry deployable models along the leading fleet axis."""
+    from repro.packed import layout
+    pt = packed_table_specs(spec)
+    lead = lambda x: jax.ShapeDtypeStruct((tenants,) + x.shape, x.dtype)
+    return layout.StackedPackedTables(
+        words=tuple(lead(w) for w in pt.words),
+        masks=tuple(lead(m) for m in pt.masks),
+        perms=tuple(lead(p) for p in pt.perms),
+        h3s=tuple(lead(h) for h in pt.h3s),
+        bias=lead(pt.bias),
+        entries=pt.entries, num_classes=pt.num_classes,
+        num_tenants=tenants)
+
+
+def make_uleen_multitenant_infer_step(st_spec, mesh, global_batch: int, *,
+                                      backend: str = "auto"):
+    """Tenant-sharded fleet inference step (DESIGN §11).
+
+    `packed.runtime.make_tenant_sharded_predict`: the fleet's stacked
+    bitplane tables partition over `model` by tenant, each shard scores
+    the rows it owns, and the masked partials cross the mesh in one psum.
+    Returns (scores, predictions) for every (bits row, tenant id) pair.
+    """
+    from repro.packed import runtime
+    return runtime.make_tenant_sharded_predict(
+        st_spec, mesh, sh.SERVE_RULES, global_batch, backend=backend)
+
+
+def uleen_multitenant_infer_specs(spec: UleenSpec, mesh, *,
+                                  tenants: int = 0,
+                                  global_batch: int = INFER_BATCH):
+    """(abstract inputs, shardings) for the multi-tenant inference cell:
+    stacked tables partitioned over `model` by tenant, batch + tenant-id
+    vector over the batch axes."""
+    rules = sh.SERVE_RULES
+    tenants = tenants or MULTITENANT_TENANTS
+    st = stacked_table_specs(spec, tenants)
+    bits = jax.ShapeDtypeStruct((global_batch, spec.total_bits), jnp.bool_)
+    tids = jax.ShapeDtypeStruct((global_batch,), jnp.int32)
+    shardings = dict(
+        st=st.tenant_shardings(mesh, rules),
+        bits=sh.named_sharding(mesh, rules, ("batch", None),
+                               shape=bits.shape),
+        tids=sh.named_sharding(mesh, rules, ("batch",), shape=tids.shape))
+    return dict(st=st, bits=bits, tids=tids), shardings
+
+
+def lower_uleen_multitenant_infer_cell(mesh, *,
+                                       tenants: int = 0,
+                                       global_batch: int = INFER_BATCH,
+                                       spec: UleenSpec = None,
+                                       backend: str = "auto"):
+    """AOT lower + compile the multi-tenant fleet inference step on `mesh`.
+
+    The N-thousand-artifact serving regime (ROADMAP "multi-tenant
+    serving"): `tenants` ULN-S models — each a KB-scale edge artifact —
+    stacked along the fleet axis and partitioned over `model`, so the
+    whole fleet lowers as ONE fixed-shape scores launch (no per-tenant
+    program, no recompile as tenants come and go; the `WnnTenantBatcher`
+    hot-cache is the dynamic-admission front end of the same dataflow).
+    Per-device table bytes are global/degree; the only cross-device
+    traffic is the single (B, M) psum of ownership-masked partials.
+    """
+    spec = spec if spec is not None else ULN_S_SPEC
+    tenants = tenants or MULTITENANT_TENANTS
+    ins, shard = uleen_multitenant_infer_specs(
+        spec, mesh, tenants=tenants, global_batch=global_batch)
+    step = make_uleen_multitenant_infer_step(ins["st"], mesh, global_batch,
+                                             backend=backend)
+    with sh.use_mesh(mesh, sh.SERVE_RULES):
+        fn = jax.jit(step, in_shardings=(shard["st"], shard["bits"],
+                                         shard["tids"]))
+        lowered = fn.lower(ins["st"], ins["bits"], ins["tids"])
         return lowered.compile()
 
 

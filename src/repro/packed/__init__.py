@@ -5,14 +5,20 @@ word); this package makes that layout the *native* serve-time
 representation — `PackedTables` carries the word planes from artifact
 load into the Pallas bitplane kernel (`kernels/packed_wnn.py`) without
 ever materializing an int8 `(M, N_f, E)` table (DESIGN §2 "Packed
-layout").
+layout"). `StackedPackedTables` stacks N same-geometry models along a
+leading `tenants` axis so one fixed-shape launch serves a whole fleet of
+KB-scale artifacts (DESIGN §11).
 """
-from repro.packed.layout import (PackedTables, from_artifact,
-                                 from_binary_model, pack_words,
+from repro.packed.layout import (PackedTables, StackedPackedTables,
+                                 from_artifact, from_binary_model,
+                                 pack_words, stack_tenants, stacked_zeros,
                                  unpack_words, validate_packed_geometry,
                                  word_count)
-from repro.packed.runtime import packed_scores
+from repro.packed.runtime import (packed_scores, stacked_predict,
+                                  stacked_scores)
 
-__all__ = ["PackedTables", "from_artifact", "from_binary_model",
-           "pack_words", "unpack_words", "validate_packed_geometry",
-           "word_count", "packed_scores"]
+__all__ = ["PackedTables", "StackedPackedTables", "from_artifact",
+           "from_binary_model", "pack_words", "stack_tenants",
+           "stacked_zeros", "unpack_words", "validate_packed_geometry",
+           "word_count", "packed_scores", "stacked_predict",
+           "stacked_scores"]

@@ -202,6 +202,216 @@ class PackedTables:
             entries=self.entries, num_classes=hi - lo)
 
 
+@dataclasses.dataclass
+class StackedPackedTables:
+    """A *fleet* of same-geometry deployable models: T `PackedTables`
+    stacked along a new leading `tenants` axis (DESIGN §11).
+
+    Leaves (per submodel, tuple-indexed): `words` (T, M, N_f, W) uint32,
+    `masks` (T, M, N_f) int8, `perms` (T, N_f, n) int32, `h3s` (T, k, n)
+    int32; plus `bias` (T, M) int32. Unlike the single-tenant layout the
+    perm/H3 structures are per-tenant leaves too — every tenant trained
+    its own hash block, only the *geometry* is shared (that is what makes
+    one fixed-shape launch serve the whole fleet).
+
+    `entries` per submodel, `num_classes` and `num_tenants` are static
+    aux data; the tenant count shapes the launch, never the trace cache.
+    """
+    words: tuple
+    masks: tuple
+    perms: tuple
+    h3s: tuple
+    bias: jnp.ndarray
+    entries: tuple = ()
+    num_classes: int = 0
+    num_tenants: int = 0
+
+    def __post_init__(self):
+        n = len(self.words)
+        if not (len(self.masks) == len(self.perms) == len(self.h3s)
+                == len(self.entries) == n):
+            raise ValueError(
+                f"per-submodel tuples disagree: words={n} "
+                f"masks={len(self.masks)} perms={len(self.perms)} "
+                f"h3s={len(self.h3s)} entries={len(self.entries)}")
+
+    @property
+    def num_submodels(self) -> int:
+        return len(self.words)
+
+    def validate(self) -> None:
+        """Trace-time geometry validation: every per-tenant leaf must
+        carry the same leading T, and tenant 0's slice must be a legal
+        single-tenant layout (per-slice shapes are uniform along T by
+        construction of an ndarray, so checking one slice checks all)."""
+        t = self.num_tenants
+        if t < 1:
+            raise ValueError(f"num_tenants={t} must be >= 1")
+        for i, leaves in enumerate(zip(self.words, self.masks, self.perms,
+                                       self.h3s)):
+            for leaf in leaves:
+                if jnp.asarray(leaf).shape[0] != t:
+                    raise ValueError(
+                        f"submodel {i}: leading tenant dim "
+                        f"{jnp.asarray(leaf).shape[0]} != num_tenants={t}")
+        if self.bias.shape != (t, self.num_classes):
+            raise ValueError(f"bias {self.bias.shape} != (T, M)="
+                             f"({t}, {self.num_classes})")
+        self.tenant_slice(0).validate()
+
+    def tenant_slice(self, tid: int) -> PackedTables:
+        """The single-tenant `PackedTables` at index `tid` — the view the
+        admission path installs from and the parity oracle scores with."""
+        if not 0 <= tid < self.num_tenants:
+            raise ValueError(
+                f"tenant {tid} outside [0, {self.num_tenants})")
+        return PackedTables(
+            words=tuple(w[tid] for w in self.words),
+            masks=tuple(m[tid] for m in self.masks),
+            perms=tuple(p[tid] for p in self.perms),
+            h3s=tuple(h[tid] for h in self.h3s),
+            bias=self.bias[tid],
+            entries=self.entries, num_classes=self.num_classes)
+
+    def tenant_shard(self, lo: int, hi: int) -> "StackedPackedTables":
+        """The tenant shard [lo, hi) — what one device holds under the
+        `tenants` partition (the manual-sharding oracle of the
+        differential battery, like `PackedTables.class_slice`)."""
+        if not 0 <= lo < hi <= self.num_tenants:
+            raise ValueError(
+                f"tenant range [{lo}, {hi}) outside [0, {self.num_tenants})")
+        return StackedPackedTables(
+            words=tuple(w[lo:hi] for w in self.words),
+            masks=tuple(m[lo:hi] for m in self.masks),
+            perms=tuple(p[lo:hi] for p in self.perms),
+            h3s=tuple(h[lo:hi] for h in self.h3s),
+            bias=self.bias[lo:hi],
+            entries=self.entries, num_classes=self.num_classes,
+            num_tenants=hi - lo)
+
+    def table_bytes(self) -> int:
+        """Packed word storage for the whole fleet (4 bytes per word) —
+        the per-device budget divides this by the tenant shard degree."""
+        return sum(int(w.shape[0]) * int(w.shape[1]) * int(w.shape[2])
+                   * int(w.shape[3]) * 4 for w in self.words)
+
+    def logical_axes(self):
+        """Parallel StackedPackedTables of logical-axis tuples: every
+        leaf carries "tenants" on its leading dim — whole tenants are
+        independent, so everything they own shards together (DESIGN §11).
+        Works on concrete tables and ShapeDtypeStruct specs alike."""
+        return StackedPackedTables(
+            words=tuple(("tenants", None, None, None) for _ in self.words),
+            masks=tuple(("tenants", None, None) for _ in self.masks),
+            perms=tuple(("tenants", None, None) for _ in self.perms),
+            h3s=tuple(("tenants", None, None) for _ in self.h3s),
+            bias=("tenants", None),
+            entries=self.entries, num_classes=self.num_classes,
+            num_tenants=self.num_tenants)
+
+    def tenant_pspecs(self, mesh, rules):
+        """PartitionSpec pytree for the tenant partition on `mesh` — the
+        shard_map in_specs of the tenant-sharded serve path. The
+        resolver's divisibility sanitizer degrades every leaf to
+        replication together when T does not divide the mesh axis."""
+        axes = self.logical_axes()
+
+        def ps(log, x):
+            return rules.resolve(log, mesh, shape=tuple(x.shape))
+
+        return StackedPackedTables(
+            words=tuple(ps(a, w) for a, w in zip(axes.words, self.words)),
+            masks=tuple(ps(a, m) for a, m in zip(axes.masks, self.masks)),
+            perms=tuple(ps(a, p) for a, p in zip(axes.perms, self.perms)),
+            h3s=tuple(ps(a, h) for a, h in zip(axes.h3s, self.h3s)),
+            bias=ps(axes.bias, self.bias),
+            entries=self.entries, num_classes=self.num_classes,
+            num_tenants=self.num_tenants)
+
+    def tenant_shardings(self, mesh, rules):
+        """NamedSharding pytree partitioning the fleet over `mesh` by
+        tenant — the in_shardings of the tenant-sharded serve path."""
+        from jax.sharding import NamedSharding
+        ps = self.tenant_pspecs(mesh, rules)
+        return StackedPackedTables(
+            words=tuple(NamedSharding(mesh, p) for p in ps.words),
+            masks=tuple(NamedSharding(mesh, p) for p in ps.masks),
+            perms=tuple(NamedSharding(mesh, p) for p in ps.perms),
+            h3s=tuple(NamedSharding(mesh, p) for p in ps.h3s),
+            bias=NamedSharding(mesh, ps.bias),
+            entries=self.entries, num_classes=self.num_classes,
+            num_tenants=self.num_tenants)
+
+
+def stack_tenants(tables) -> StackedPackedTables:
+    """Stack N same-geometry `PackedTables` into one fleet.
+
+    Every artifact must agree on submodel count, `entries`, `num_classes`
+    and per-submodel leaf shapes — geometry mismatches raise ValueError at
+    stack time naming the offender (the trace-time guarantee that one
+    compiled launch serves every tenant).
+    """
+    tables = list(tables)
+    if not tables:
+        raise ValueError("stack_tenants needs at least one PackedTables")
+    ref = tables[0]
+    for t, pt in enumerate(tables[1:], start=1):
+        if pt.entries != ref.entries:
+            raise ValueError(
+                f"tenant {t}: entries {pt.entries} != tenant 0's "
+                f"{ref.entries} — stacked tenants must share geometry")
+        if pt.num_classes != ref.num_classes:
+            raise ValueError(
+                f"tenant {t}: num_classes {pt.num_classes} != tenant 0's "
+                f"{ref.num_classes}")
+        for i, (a, b) in enumerate(zip(pt.words, ref.words)):
+            if a.shape != b.shape:
+                raise ValueError(
+                    f"tenant {t} submodel {i}: words {a.shape} != "
+                    f"tenant 0's {b.shape}")
+        for i, (a, b) in enumerate(zip(pt.perms, ref.perms)):
+            if a.shape != b.shape:
+                raise ValueError(
+                    f"tenant {t} submodel {i}: perm {a.shape} != "
+                    f"tenant 0's {b.shape}")
+    n_sub = ref.num_submodels
+    st = StackedPackedTables(
+        words=tuple(jnp.stack([pt.words[i] for pt in tables])
+                    for i in range(n_sub)),
+        masks=tuple(jnp.stack([pt.masks[i] for pt in tables])
+                    for i in range(n_sub)),
+        perms=tuple(jnp.stack([pt.perms[i] for pt in tables])
+                    for i in range(n_sub)),
+        h3s=tuple(jnp.stack([pt.h3s[i] for pt in tables])
+                  for i in range(n_sub)),
+        bias=jnp.stack([pt.bias for pt in tables]),
+        entries=ref.entries, num_classes=ref.num_classes,
+        num_tenants=len(tables))
+    st.validate()
+    return st
+
+
+def stacked_zeros(template: PackedTables, capacity: int) -> StackedPackedTables:
+    """An all-empty fleet of `capacity` slots with `template`'s geometry —
+    the device-resident cache the tenant batcher installs artifacts into.
+    Empty Bloom words answer 0 for every lookup, so an unfilled slot
+    scores exactly the zero bias it carries and is never routed to."""
+    if capacity < 1:
+        raise ValueError(f"capacity={capacity} must be >= 1")
+
+    def z(x, dtype):
+        return jnp.zeros((capacity,) + tuple(x.shape), dtype)
+
+    return StackedPackedTables(
+        words=tuple(z(w, jnp.uint32) for w in template.words),
+        masks=tuple(z(m, jnp.int8) for m in template.masks),
+        perms=tuple(z(p, jnp.int32) for p in template.perms),
+        h3s=tuple(z(h, jnp.int32) for h in template.h3s),
+        bias=jnp.zeros((capacity, template.num_classes), jnp.int32),
+        entries=template.entries, num_classes=template.num_classes,
+        num_tenants=capacity)
+
+
 def _flatten(pt: PackedTables):
     children = (pt.words, pt.masks, pt.perms, pt.h3s, pt.bias)
     aux = (pt.entries, pt.num_classes)
@@ -219,6 +429,27 @@ def _unflatten(aux, children) -> PackedTables:
 
 
 jax.tree_util.register_pytree_node(PackedTables, _flatten, _unflatten)
+
+
+def _flatten_stacked(st: StackedPackedTables):
+    children = (st.words, st.masks, st.perms, st.h3s, st.bias)
+    aux = (st.entries, st.num_classes, st.num_tenants)
+    return children, aux
+
+
+def _unflatten_stacked(aux, children) -> StackedPackedTables:
+    words, masks, perms, h3s, bias = children
+    entries, num_classes, num_tenants = aux
+    st = object.__new__(StackedPackedTables)  # skip __post_init__: leaves
+    st.words, st.masks, st.perms = words, masks, perms  # may be tracers/
+    st.h3s, st.bias = h3s, bias                         # None mid-map
+    st.entries, st.num_classes = entries, num_classes
+    st.num_tenants = num_tenants
+    return st
+
+
+jax.tree_util.register_pytree_node(StackedPackedTables, _flatten_stacked,
+                                   _unflatten_stacked)
 
 
 def from_binary_model(statics: Sequence, tables_bin: Sequence,

@@ -1,0 +1,229 @@
+"""Multi-tenant stacked serving battery (DESIGN §11).
+
+The contract: stacking N same-geometry packed artifacts along a leading
+`tenants` axis and scoring every (row, tenant id) pair through ONE
+fixed-shape program is **exactly int32 score-equal** to scoring each row
+against its own tenant's solo `packed_scores` — replicated, and with the
+fleet partitioned over the mesh's `model` axis by tenant (ownership-
+masked partials, one psum; int32 addition is associative so this holds
+bit-for-bit). Mesh cases run on the forced 8-device host platform
+(tests/conftest.py), meshed (data=2, model=4).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_sharded_serving import _artifact, _mesh8, _spec, needs8
+
+from repro.core import export
+from repro.dist import sharding as sh
+from repro.kernels import ops
+from repro.packed import (StackedPackedTables, packed_scores, stack_tenants,
+                          stacked_predict, stacked_scores, stacked_zeros)
+from repro.packed import runtime
+
+
+def _fleet(n, m=10, seed0=0, multi=True):
+    spec = _spec(m, multi=multi)
+    arts = [_artifact(spec, seed=seed0 + i) for i in range(n)]
+    preps = [export.prepare_artifact(a, backend="auto") for a in arts]
+    return spec, arts, preps
+
+
+# ---------------------------------------------------------------------------
+# Layout: stack / slice / validate
+# ---------------------------------------------------------------------------
+
+def test_stack_tenants_roundtrip_and_geometry_gate():
+    spec, _arts, preps = _fleet(3)
+    st = stack_tenants(preps)
+    assert st.num_tenants == 3
+    assert st.num_classes == spec.num_classes
+    st.validate()
+    for t, prep in enumerate(preps):
+        sl = st.tenant_slice(t)
+        for a, b in zip(sl.words, prep.words):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(sl.perms, prep.perms):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(sl.bias),
+                                      np.asarray(prep.bias))
+    shard = st.tenant_shard(1, 3)
+    assert shard.num_tenants == 2
+    np.testing.assert_array_equal(np.asarray(shard.bias),
+                                  np.asarray(st.bias[1:3]))
+    # a tenant with different geometry must be rejected at stack time
+    other = export.prepare_artifact(_artifact(_spec(8), seed=99),
+                                    backend="auto")
+    with pytest.raises(ValueError, match="geometry"):
+        stack_tenants([preps[0], other])
+    with pytest.raises(ValueError, match="at least one"):
+        stack_tenants([])
+
+
+def test_stacked_zeros_scores_zero_everywhere():
+    """Empty slots answer 0 for every lookup and carry zero bias, so an
+    unfilled fleet scores exactly 0 — the admission-cache invariant."""
+    spec, _arts, preps = _fleet(1)
+    st = stacked_zeros(preps[0], 4)
+    assert st.num_tenants == 4
+    bits = np.ones((5, spec.total_bits), np.uint8)
+    tids = np.arange(5, dtype=np.int32) % 4
+    scores = np.asarray(stacked_scores(st, bits, tids))
+    np.testing.assert_array_equal(scores, 0)
+
+
+# ---------------------------------------------------------------------------
+# Runtime: stacked parity vs per-tenant solo scores
+# ---------------------------------------------------------------------------
+
+def test_stacked_scores_bit_exact_per_tenant_parity():
+    spec, _arts, preps = _fleet(4, seed0=10)
+    st = stack_tenants(preps)
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, (31, spec.total_bits)).astype(np.uint8)
+    tids = rng.integers(0, 4, (31,)).astype(np.int32)
+    scores, preds = stacked_predict(st, bits, tids)
+    scores = np.asarray(scores)
+    for t in range(4):
+        rows = tids == t
+        solo = np.asarray(packed_scores(preps[t], bits[rows]))
+        np.testing.assert_array_equal(scores[rows], solo)
+    np.testing.assert_array_equal(np.asarray(preds), scores.argmax(-1))
+    # the ownership mask zeroes foreign rows exactly (bias included)
+    valid = tids < 2
+    masked = np.asarray(stacked_scores(st, bits, tids, valid=valid))
+    np.testing.assert_array_equal(masked[~valid], 0)
+    np.testing.assert_array_equal(masked[valid], scores[valid])
+
+
+def test_wnn_scores_tenant_rejects_bad_geometry():
+    spec, _arts, preps = _fleet(2)
+    st = stack_tenants(preps)
+    bits = np.zeros((4, spec.total_bits), np.uint8)
+    tids = np.zeros((4,), np.int32)
+    with pytest.raises(ValueError, match="backend"):
+        stacked_scores(st, bits, tids, backend="fused")
+    with pytest.raises(ValueError):
+        ops.wnn_scores_tenant(bits, tids.astype(np.float32), st.perms[0],
+                              st.h3s[0], st.words[0], st.masks[0],
+                              entries=st.entries[0])
+    with pytest.raises(ValueError):
+        # words missing the tenant axis
+        ops.wnn_scores_tenant(bits, tids, st.perms[0], st.h3s[0],
+                              st.words[0][0], st.masks[0],
+                              entries=st.entries[0])
+
+
+# ---------------------------------------------------------------------------
+# Export: multi-artifact prep with per-(backend, mesh) memoization
+# ---------------------------------------------------------------------------
+
+def test_prepare_tenants_memoizes_and_stacks():
+    spec, arts, preps = _fleet(3, seed0=20)
+    st = export.prepare_tenants(arts, backend="auto")
+    assert st is export.prepare_tenants(arts, backend="auto")
+    assert st.num_tenants == 3
+    for t in range(3):
+        for a, b in zip(st.tenant_slice(t).words, preps[t].words):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="at least one"):
+        export.prepare_tenants([])
+
+
+@needs8
+def test_prepare_tenants_mesh_places_tenant_sharded():
+    mesh = _mesh8()
+    _spec_, arts, _preps = _fleet(8, seed0=30)
+    st = export.prepare_tenants(arts, backend="auto", mesh=mesh)
+    assert st is export.prepare_tenants(arts, backend="auto", mesh=mesh)
+    assert st is not export.prepare_tenants(arts, backend="auto")
+    _entry, degree = sh.tenant_partition(mesh, 8)
+    assert degree == 4
+    # the leading tenant dim is genuinely partitioned over `model`
+    assert st.words[0].addressable_shards[0].data.shape[0] == 8 // degree
+
+
+# ---------------------------------------------------------------------------
+# Tenant-sharded predict: one psum, bit-exact vs replicated
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_tenant_sharded_predict_bit_exact_parity():
+    mesh = _mesh8()
+    spec, arts, _preps = _fleet(8, seed0=40)
+    st_rep = export.prepare_tenants(arts, backend="auto")
+    st_dev = export.prepare_tenants(arts, backend="auto", mesh=mesh)
+    rng = np.random.default_rng(1)
+    bits = rng.integers(0, 2, (32, spec.total_bits)).astype(np.uint8)
+    tids = rng.integers(0, 8, (32,)).astype(np.int32)
+    ref_s, ref_p = stacked_predict(st_rep, bits, tids)
+    predict = runtime.make_tenant_sharded_predict(st_rep, mesh,
+                                                  sh.SERVE_RULES, 32)
+    got_s, got_p = predict(st_dev, jnp.asarray(bits), jnp.asarray(tids))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(ref_p))
+
+
+@needs8
+def test_tenant_sharded_predict_fallback_when_indivisible():
+    """T=6 does not divide the 4-way model axis: the builder must fall
+    back to the replicated GSPMD path, same answers, no special-casing."""
+    mesh = _mesh8()
+    spec, arts, _preps = _fleet(6, seed0=50)
+    st = export.prepare_tenants(arts, backend="auto")
+    _entry, degree = sh.tenant_partition(mesh, 6)
+    assert degree == 1
+    rng = np.random.default_rng(2)
+    bits = rng.integers(0, 2, (16, spec.total_bits)).astype(np.uint8)
+    tids = rng.integers(0, 6, (16,)).astype(np.int32)
+    predict = runtime.make_tenant_sharded_predict(st, mesh,
+                                                  sh.SERVE_RULES, 16)
+    ref_s, _ = stacked_predict(st, bits, tids)
+    got_s, _ = predict(st, bits, tids)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(ref_s))
+
+
+# ---------------------------------------------------------------------------
+# The multitenant production cell, CPU-sized
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_multitenant_cell_lowers_one_collective_sharded_tables():
+    """lower_uleen_multitenant_infer_cell on the 8-device mesh: exactly
+    one all-reduce (the ownership-masked psum), per-device argument bytes
+    bounded by fleet/degree + batch shard — and wnnlint finds nothing
+    wrong with the same program (the acceptance property of the
+    infer_multitenant_scale dry-run, CPU-sized)."""
+    import math
+
+    from repro.analysis import cells as lint_cells
+    from repro.analysis import registry
+    from repro.analysis.hlo_rules import collective_counts
+    from repro.launch import uleen_cell
+
+    mesh = _mesh8()
+    spec = _spec(8, multi=True)
+    tenants, batch = 64, 256
+    compiled = uleen_cell.lower_uleen_multitenant_infer_cell(
+        mesh, tenants=tenants, global_batch=batch, spec=spec)
+    counts = collective_counts(compiled.as_text())
+    assert counts.get("all-reduce") == 1, counts
+    _entry, degree = sh.tenant_partition(mesh, tenants)
+    assert degree == 4
+    st_spec = uleen_cell.stacked_table_specs(spec, tenants)
+    fleet_bytes = sum(math.prod(l.shape) * l.dtype.itemsize
+                      for l in jax.tree.leaves(st_spec))
+    b_loc = batch // 2                      # data axis = 2
+    args = compiled.memory_analysis().argument_size_in_bytes
+    assert args <= (fleet_bytes // degree
+                    + b_loc * (spec.total_bits + 4) + (1 << 20)), (
+        "per-device args exceed the tenant-sharded fleet bound")
+
+    # wnnlint over the REAL cell (2048-tenant ULN-S fleet, the same
+    # program the CI fast job lints), CI-batch-sized
+    prog = lint_cells.uleen_cell_program("infer_multitenant_scale", mesh,
+                                         global_batch=batch)
+    findings = registry.analyze_program(prog)
+    assert registry.count(findings, "error") == 0, findings

@@ -254,3 +254,36 @@ def test_serve_state_zeros_matches_prefill_structure(smoke):
     assert jax.tree.structure(zeros) == jax.tree.structure(real)
     assert [(l.shape, l.dtype) for l in z_leaves] == \
         [(l.shape, l.dtype) for l in r_leaves]
+
+
+# ---------------------------------------------------------------------------
+# Stats schema regressions (serve-path bugfixes riding the DESIGN §11 PR)
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_empty_returns_full_schema(smoke):
+    """stats() on an idle engine carries EVERY key of the traffic schema
+    (latencies as None, counters as 0) — downstream consumers index it
+    unconditionally, so the key set must never shrink."""
+    cfg, params = smoke
+    eng = Engine(cfg, params, slots=2, max_len=16)
+    assert eng.stats() == {
+        "requests": 0, "tokens": 0, "tok_per_s": 0.0,
+        "latency_mean_s": None, "latency_p50_s": None,
+        "latency_max_s": None, "queue_wait_mean_s": None,
+        "decode_steps": 0, "peak_active": 0}
+
+
+def test_engine_stats_count_zero_clock_completions(smoke):
+    """A request finishing at clock 0.0 is COMPLETE, not in flight: the
+    old `if r.t_done` truthiness filter silently dropped zero-clock
+    completions from every aggregate."""
+    cfg, params = smoke
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN, clock=lambda: 0.0)
+    for toks in _prompts(cfg, [8, 8], seed=3):
+        eng.submit(toks, max_new=4)
+    results = eng.drain()
+    assert all(r.t_done == 0.0 for r in results)
+    st = eng.stats()
+    assert st["requests"] == 2 and st["tokens"] == 8
+    assert st["latency_mean_s"] == 0.0 and st["latency_p50_s"] == 0.0
+    assert st["latency_max_s"] == 0.0

@@ -13,6 +13,8 @@ tests/conftest.py before jax initialises and by the CI fast job), meshed
 as (data=2, model=4): M ∈ {8, 12} shard 4-way, M=10 exercises the
 replication fallback.
 """
+import collections
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -354,3 +356,195 @@ def test_sharded_infer_cell_lowers_with_partitioned_tables():
     table_bytes = uleen_cell.packed_table_specs(spec).table_bytes()
     # sharded args shed ~ (1 - 1/degree) of the table bytes
     assert args_r - args_s >= (table_bytes - table_bytes // degree) * 0.9
+
+
+# ---------------------------------------------------------------------------
+# Serve-path stats regressions: zero-clock completions, even-length p50
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    """Injectable wall clock: tests set `t` between scheduler calls."""
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_median_even_length_averages_middle_pair():
+    """The 2-element pin: p50 of an even-length series is the mean of the
+    middle pair — the old `lat[len//2]` picked the UPPER element."""
+    from repro.launch.scheduler import _median
+    assert _median([1.0, 3.0]) == 2.0
+    assert _median([1.0, 2.0, 3.0, 10.0]) == 2.5
+    assert _median([5.0]) == 5.0
+    assert _median([1.0, 2.0, 7.0]) == 2.0
+
+
+def test_wnn_batcher_zero_clock_and_even_median():
+    """t_done == 0.0 is a COMPLETED request (the old `if r.t_done`
+    truthiness filter dropped it), and an even latency count medians the
+    middle pair."""
+    from repro.launch.scheduler import WnnBatcher
+    spec = _spec(8)
+    art = _artifact(spec, seed=3)
+    row = np.zeros((spec.total_bits,), np.uint8)
+
+    zero = WnnBatcher(art, slots=2, backend="auto", clock=lambda: 0.0)
+    zero.submit(row)
+    results = zero.drain()
+    assert results[0].t_done == 0.0
+    st0 = zero.stats()
+    assert st0["requests"] == 1
+    assert st0["latency_p50_s"] == 0.0 and st0["latency_max_s"] == 0.0
+
+    clk = _Clock()
+    eng = WnnBatcher(art, slots=4, backend="auto", clock=clk)
+    eng.submit(row)                      # t_submit = 0.0
+    clk.t = 1.0
+    eng.submit(row)                      # t_submit = 1.0
+    clk.t = 4.0
+    eng.step()                           # both done at 4.0 -> lats [4, 3]
+    st = eng.stats()
+    assert st["requests"] == 2
+    assert st["latency_p50_s"] == 3.5 and st["latency_max_s"] == 4.0
+
+
+# ---------------------------------------------------------------------------
+# WnnTenantBatcher: tenant-routed fleet serving (DESIGN §11)
+# ---------------------------------------------------------------------------
+
+def _tenant_fleet(n, seed0=0):
+    spec = _spec(10, multi=True)
+    return spec, [_artifact(spec, seed=seed0 + i) for i in range(n)]
+
+
+def test_tenant_batcher_parity_with_eviction_single_compile():
+    """capacity 2 < 5 tenants forces admission/eviction churn, yet every
+    request's scores are bit-identical to its tenant's solo WnnBatcher,
+    with exactly ONE scores compile and ONE install compile."""
+    from repro.launch.scheduler import WnnBatcher, WnnTenantBatcher
+    spec, arts = _tenant_fleet(5, seed0=60)
+    tb = WnnTenantBatcher(capacity=2, slots=4, backend="auto")
+    tids = [tb.add_tenant(a) for a in arts]
+    assert tids == list(range(5))
+    solos = [WnnBatcher(a, slots=4, backend="auto") for a in arts]
+
+    rng = np.random.default_rng(4)
+    pairs = []
+    for _ in range(40):
+        tid = int(rng.integers(0, 5))
+        row = rng.integers(0, 2, (spec.total_bits,)).astype(np.uint8)
+        pairs.append((tb.submit(tid, row), tid, solos[tid].submit(row)))
+    got = {r.rid: r for r in tb.drain()}
+    ref = [{r.rid: r for r in s.drain()} for s in solos]
+    for rid, tid, srid in pairs:
+        assert got[rid].tid == tid
+        np.testing.assert_array_equal(got[rid].scores,
+                                      ref[tid][srid].scores)
+        assert got[rid].pred == ref[tid][srid].pred
+    st = tb.stats()
+    assert st["traces"] == 1, "tenant churn must not add compiles"
+    assert st["install_traces"] == 1, "slot installs share one program"
+    assert st["evictions"] > 0, "capacity 2 over 5 tenants must evict"
+    assert st["hits"] + st["misses"] == st["served"] == 40
+    assert st["misses"] == st["admissions"]
+    assert st["resident"] <= st["capacity"] == 2
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_tenant_batcher_interleaving_stress_per_tenant_stats(seed):
+    """Random submit/step/drain interleavings over a 4-tenant fleet with
+    a 3-slot cache: nothing lost, duplicated, or mis-routed; per-tenant
+    stats reconcile with what was actually submitted per tenant."""
+    from repro.launch.scheduler import WnnTenantBatcher
+    spec, arts = _tenant_fleet(4, seed0=70 + 10 * seed)
+    tb = WnnTenantBatcher(capacity=3, slots=4, backend="auto")
+    for a in arts:
+        tb.add_tenant(a)
+    rng = np.random.default_rng(seed)
+    submitted = {}                       # rid -> (tid, bits row)
+    for _ in range(150):
+        op = rng.choice(["submit", "submit", "step", "drain"])
+        if op == "submit":
+            tid = int(rng.integers(0, 4))
+            row = rng.integers(0, 2, (spec.total_bits,)).astype(np.uint8)
+            rid = tb.submit(tid, row)
+            assert rid not in submitted
+            submitted[rid] = (tid, row)
+        elif op == "step":
+            tb.step()
+        else:
+            tb.drain()
+            assert not tb.queue
+    results = tb.drain()
+    assert [r.rid for r in results] == sorted(submitted)
+    for r in results:
+        tid, row = submitted[r.rid]
+        assert r.tid == tid
+        expect = np.asarray(export.artifact_scores(
+            arts[tid], jnp.asarray(row[None])))[0]
+        np.testing.assert_array_equal(r.scores, expect)
+        assert r.t_done is not None and r.t_done >= r.t_submit
+    st = tb.stats()
+    assert st["requests"] == st["submitted"] == st["served"] == \
+        len(submitted)
+    assert st["queued"] == 0 and st["traces"] == 1
+    per_tid = collections.Counter(tid for tid, _ in submitted.values())
+    for tid in range(4):
+        pt = st["per_tenant"][tid]
+        assert pt["requests"] == per_tid[tid]
+        if per_tid[tid]:
+            assert pt["latency_p50_s"] is not None
+            assert 0.0 < pt["occupancy"] <= 1.0
+        else:
+            assert pt["latency_p50_s"] is None
+    assert abs(sum(st["per_tenant"][t]["occupancy"] for t in range(4))
+               - st["occupancy"]) < 1e-9
+
+
+@needs8
+def test_tenant_batcher_mesh_parity_single_compile():
+    """Batch-sharded tenant batcher on the 8-device mesh: bit-identical
+    results to the unsharded batcher, still one compile."""
+    from repro.launch.scheduler import WnnTenantBatcher
+    mesh = _mesh8()
+    spec, arts = _tenant_fleet(5, seed0=90)
+    plain = WnnTenantBatcher(capacity=2, slots=8, backend="auto")
+    sharded = WnnTenantBatcher(capacity=2, slots=8, backend="auto",
+                               mesh=mesh)
+    for a in arts:
+        plain.add_tenant(a)
+        sharded.add_tenant(a)
+    rng = np.random.default_rng(5)
+    for _ in range(30):
+        tid = int(rng.integers(0, 5))
+        row = rng.integers(0, 2, (spec.total_bits,)).astype(np.uint8)
+        plain.submit(tid, row)
+        sharded.submit(tid, row)
+    res_p, res_s = plain.drain(), sharded.drain()
+    np.testing.assert_array_equal(np.stack([r.scores for r in res_s]),
+                                  np.stack([r.scores for r in res_p]))
+    assert [r.pred for r in res_s] == [r.pred for r in res_p]
+    assert sharded.stats()["traces"] == 1
+
+
+def test_tenant_batcher_validation():
+    from repro.launch.scheduler import WnnTenantBatcher
+    spec, arts = _tenant_fleet(1, seed0=95)
+    with pytest.raises(ValueError, match="capacity"):
+        WnnTenantBatcher(capacity=0)
+    with pytest.raises(ValueError, match="packed domain"):
+        WnnTenantBatcher(backend="fused")
+    tb = WnnTenantBatcher(capacity=2, slots=4)
+    with pytest.raises(ValueError, match="unknown tenant"):
+        tb.submit(0, np.zeros(8, np.uint8))
+    tb.add_tenant(arts[0])
+    with pytest.raises(ValueError, match="bits"):
+        tb.submit(0, np.zeros(spec.total_bits + 1, np.uint8))
+    with pytest.raises(ValueError, match="geometry"):
+        tb.add_tenant(_artifact(_spec(8), seed=96))
+    # empty stats: stable schema, latencies None
+    st = tb.stats()
+    assert st["requests"] == 0 and st["latency_p50_s"] is None
+    assert st["per_tenant"][0]["latency_p50_s"] is None
