@@ -25,6 +25,7 @@ from repro.configs.base import get_config
 from repro.launch.scheduler import Engine, synth_request_stream
 from repro.launch.serve import serve
 from repro.models import transformer
+from repro.obs.metrics import fmt_seconds
 
 ARCHS = ["mixtral_8x7b", "mamba2_2p7b", "recurrentgemma_2b"]
 MAX_LEN = 64
@@ -72,11 +73,14 @@ def main():
                 f"{cfg.name} engine diverged from sync serve on rid " \
                 f"{res.rid}"
         st = eng.stats()
+        # latency fields are None sentinels when nothing completed —
+        # format None-safe, like launch/serve.py (DESIGN §12)
         print(f"{cfg.name:24s} stream {st['tokens']} tokens / "
               f"{st['requests']} requests in {dt:5.2f}s "
               f"| {st['decode_steps']} decode steps, peak "
-              f"{st['peak_active']}/3 slots, mean latency "
-              f"{st['latency_mean_s']:.3f}s")
+              f"{st['peak_active']}/3 slots, mean/p99 latency "
+              f"{fmt_seconds(st['latency_mean_s'])}/"
+              f"{fmt_seconds(st['latency_p99_s'])}s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,223 @@
+#!/usr/bin/env python
+"""Diff two obsmetrics/v1 METRICS.json snapshots and fail on latency
+regressions.
+
+The nightly CI job runs `repro.launch.dryrun --all`, which writes a
+METRICS.json next to its per-cell records (per-cell lower/compile spans,
+AOT counters, step-time and latency histograms when the sweep exercises
+serve/train paths). This script is `diff_dryrun.py` for telemetry: it
+compares the fresh snapshot against the previous nightly's artifact and
+gates on histogram quantile growth — a step-time or serving-latency p50/
+p99 that got materially slower fails the night even though every cell
+still compiles:
+
+    python scripts/diff_metrics.py results/nightly results/previous \
+        --tol 0.25 --slack-s 0.05 --md-out "$GITHUB_STEP_SUMMARY"
+
+A histogram regresses when  new_q > old_q * (1 + tol) + slack  for
+q ∈ {p50, p99} (the absolute slack keeps sub-resolution jitter on
+microsecond-scale histograms from tripping the relative gate; the
+default tol is looser than the peak-GiB gate because shared CI runners
+have real wall-clock variance). Span durations and counters are
+reported informationally only — compile times on cold caches are far
+too noisy to gate, and counter totals scale with sweep size — except
+that a GROWN retrace counter for the same sweep shape is flagged, since
+that is exactly the recompile-guard regression the serve tests pin.
+Exit 0 when the previous snapshot is missing (first nightly) or nothing
+regresses; 1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import pathlib
+import sys
+
+sys.path.insert(
+    0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs import registry as obs_registry  # noqa: E402
+
+GATED_QUANTILES = ("p50", "p99")
+
+
+def find_metrics(root: str):
+    """Newest schema-valid METRICS.json under `root` (recursing so
+    artifact-download subdirs work); None when absent/invalid."""
+    rootp = pathlib.Path(root)
+    if rootp.is_file():
+        candidates = [rootp]
+    elif rootp.exists():
+        candidates = sorted(rootp.rglob("METRICS.json"))
+    else:
+        candidates = []
+    for path in reversed(candidates):
+        try:
+            return obs_registry.load_metrics(path), path
+        except (OSError, ValueError) as e:
+            print(f"[diff-metrics] skipping {path}: {e}")
+    return None, None
+
+
+def compare_histograms(new: dict, prev: dict, tol: float,
+                       slack: float) -> list[dict]:
+    """One row per (histogram, gated quantile) present on both sides
+    with observations; one-sided histograms become informational rows."""
+    rows = []
+    nh, ph = new["histograms"], prev["histograms"]
+    for name in sorted(set(nh) | set(ph)):
+        if name not in ph or not ph[name]["count"]:
+            rows.append({"name": name, "q": "-", "prev": None,
+                         "new": None, "status": "new"})
+            continue
+        if name not in nh or not nh[name]["count"]:
+            rows.append({"name": name, "q": "-", "prev": None,
+                         "new": None, "status": "vanished"})
+            continue
+        for q in GATED_QUANTILES:
+            pv, nv = ph[name][q], nh[name][q]
+            if pv is None or nv is None:
+                continue
+            limit = pv * (1.0 + tol) + slack
+            rows.append({"name": name, "q": q, "prev": pv, "new": nv,
+                         "limit": limit,
+                         "status": "regression" if nv > limit else "ok"})
+    return rows
+
+
+def compare_retraces(new: dict, prev: dict) -> list[str]:
+    """Names of `jax.trace.*` counters that GREW versus the previous
+    nightly — for an identical sweep shape that means a cell started
+    retracing (the recompile-guard regression)."""
+    out = []
+    for name, nv in new["counters"].items():
+        if not name.startswith("jax.trace."):
+            continue
+        pv = prev["counters"].get(name)
+        if pv is not None and pv > 0 and nv > pv:
+            out.append(name)
+    return sorted(out)
+
+
+def span_totals(doc: dict) -> dict[str, tuple[int, float]]:
+    """span name -> (count, total seconds); informational only."""
+    out: dict[str, list] = collections.defaultdict(lambda: [0, 0.0])
+    for sp in doc["spans"]:
+        if sp["dur_s"] is not None:
+            agg = out[sp["name"]]
+            agg[0] += 1
+            agg[1] += sp["dur_s"]
+    return {k: (c, t) for k, (c, t) in sorted(out.items())}
+
+
+_MD_MARK = {"ok": "✅", "regression": "❌ regression", "new": "🆕",
+            "vanished": "⚠️ vanished"}
+
+
+def render_markdown(rows: list[dict], retraces: list[str],
+                    new: dict, prev: dict, tol: float) -> str:
+    def sec(v):
+        return "–" if v is None else f"{v:.6f}"
+
+    def delta(r):
+        if r.get("prev") is None or r.get("new") is None or not r["prev"]:
+            return "–"
+        return f"{(r['new'] / r['prev'] - 1) * 100:+.1f}%"
+
+    n_reg = sum(r["status"] == "regression" for r in rows)
+    lines = [
+        "## Nightly METRICS.json latency diff",
+        "",
+        (f"{n_reg} histogram quantile(s) past +{tol:.0%}" if n_reg
+         else f"All histogram quantiles within +{tol:.0%} of the "
+              "previous nightly."),
+        "",
+        "| histogram | q | prev (s) | new (s) | Δ | status |",
+        "| --- | --- | ---: | ---: | ---: | --- |",
+    ]
+    for r in rows:
+        lines.append(f"| `{r['name']}` | {r['q']} | {sec(r.get('prev'))} "
+                     f"| {sec(r.get('new'))} | {delta(r)} "
+                     f"| {_MD_MARK[r['status']]} |")
+    if retraces:
+        lines += ["", "**Retrace counters grew** (recompile-guard "
+                  "regression for an identical sweep shape): "
+                  + ", ".join(f"`{n}`" for n in retraces)]
+    totals = span_totals(new)
+    if totals:
+        lines += ["", "<details><summary>Span wall-time (informational — "
+                  "cold-cache compile noise, not gated)</summary>", "",
+                  "| span | count | total s |", "| --- | ---: | ---: |"]
+        pt = span_totals(prev)
+        for name, (c, t) in totals.items():
+            pc = pt.get(name)
+            prev_s = f" (prev {pc[1]:.3f})" if pc else ""
+            lines.append(f"| `{name}` | {c} | {t:.3f}{prev_s} |")
+        lines += ["", "</details>"]
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new_dir", help="fresh sweep output dir (or file)")
+    ap.add_argument("prev_dir", help="previous nightly's artifacts dir")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="relative quantile growth allowed (default 25%%)")
+    ap.add_argument("--slack-s", type=float, default=0.05,
+                    help="absolute slack in seconds added to the gate")
+    ap.add_argument("--md-out", default=None,
+                    help="append the diff as a markdown table to this file "
+                         "(point at $GITHUB_STEP_SUMMARY in CI)")
+    args = ap.parse_args(argv)
+
+    new, new_path = find_metrics(args.new_dir)
+    if new is None:
+        print(f"[diff-metrics] no valid METRICS.json under "
+              f"{args.new_dir}: nothing to gate")
+        return 1
+    prev, prev_path = find_metrics(args.prev_dir)
+    if prev is None:
+        print(f"[diff-metrics] no previous METRICS.json under "
+              f"{args.prev_dir} (first nightly?) — skipping the gate")
+        if args.md_out:
+            with open(args.md_out, "a") as f:
+                f.write("## Nightly METRICS.json latency diff\n\n"
+                        "No previous METRICS.json to compare against — "
+                        "regression gate skipped.\n")
+        return 0
+    print(f"[diff-metrics] comparing {new_path} against {prev_path}")
+
+    rows = compare_histograms(new, prev, args.tol, args.slack_s)
+    regressions = [f"{r['name']}:{r['q']}" for r in rows
+                   if r["status"] == "regression"]
+    for r in rows:
+        if r["status"] == "regression":
+            print(f"[diff-metrics] {r['name']} {r['q']}: "
+                  f"{r['prev']:.6f}s -> {r['new']:.6f}s "
+                  f"(limit {r['limit']:.6f}s)  <-- REGRESSION")
+        elif r["status"] in ("new", "vanished"):
+            print(f"[diff-metrics] histogram {r['name']}: {r['status']}")
+
+    retraces = compare_retraces(new, prev)
+    for name in retraces:
+        print(f"[diff-metrics] retrace counter {name} grew: "
+              f"{prev['counters'][name]} -> {new['counters'][name]}"
+              "  <-- REGRESSION")
+    regressions.extend(retraces)
+
+    if args.md_out:
+        with open(args.md_out, "a") as f:
+            f.write(render_markdown(rows, retraces, new, prev, args.tol))
+
+    compared = sum(r["status"] in ("ok", "regression") for r in rows)
+    if regressions:
+        print(f"[diff-metrics] {len(regressions)} regression(s) over "
+              f"{compared} compared quantile(s): {regressions}")
+        return 1
+    print(f"[diff-metrics] ok: {compared} quantile(s) within "
+          f"+{args.tol:.0%} of the previous nightly")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

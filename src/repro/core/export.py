@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.model import SubmodelStatic, UleenParams, UleenSpec, binarize_params
+from repro.obs import registry as obs_registry
 
 
 @dataclasses.dataclass
@@ -197,6 +198,7 @@ def prepare_artifact(artifact: InferenceArtifact, *, backend: str = "auto",
     """
     from repro.kernels import ops  # late import: export is also numpy-only IO
     ops.resolve_wnn_backend(backend)     # reject unknown names eagerly
+    rec = obs_registry.get_recorder()
     cache = getattr(artifact, "_prepared", None)
     if cache is None:
         cache = artifact._prepared = {}
@@ -212,21 +214,30 @@ def prepare_artifact(artifact: InferenceArtifact, *, backend: str = "auto",
         key = ("packed" if backend in ("auto", "packed") else "int8",
                mesh, rules_key)
         if key in cache:
+            rec.counter("prep.cache_hit").inc()
             return cache[key]
-        base = cache.get(backend)
-        if base is None:
-            base = cache.get(_SAME_REPRESENTATION[backend])
-        if base is None:
-            base = _build_prep(artifact, backend)   # NOT cached: don't pin
-            #                                         a replicated copy too
-        prep = jax.device_put(base, prep_shardings(base, mesh, rules))
+        rec.counter("prep.cache_miss").inc()
+        with rec.span("prep.build", backend=backend, sharded=True):
+            base = cache.get(backend)
+            if base is None:
+                base = cache.get(_SAME_REPRESENTATION[backend])
+            if base is None:
+                base = _build_prep(artifact, backend)  # NOT cached: don't
+                #                             pin a replicated copy too
+            prep = jax.device_put(base, prep_shardings(base, mesh, rules))
         cache[key] = prep
         return prep
     if backend in cache:
+        rec.counter("prep.cache_hit").inc()
         return cache[backend]
     prep = cache.get(_SAME_REPRESENTATION[backend])
     if prep is None:
-        prep = _build_prep(artifact, backend)
+        rec.counter("prep.cache_miss").inc()
+        with rec.span("prep.build", backend=backend, sharded=False):
+            prep = _build_prep(artifact, backend)
+    else:
+        # same-representation reuse: no build, but record the alias fill
+        rec.counter("prep.cache_hit").inc()
     cache[backend] = prep
     return prep
 
@@ -274,15 +285,20 @@ def prepare_tenants(artifacts, *, backend: str = "auto",
         key = ("tenants", ids, mesh, rules_key)
     else:
         key = ("tenants", ids)
+    rec = obs_registry.get_recorder()
     hit = cache.get(key)
     if hit is not None:
+        rec.counter("prep.cache_hit").inc()
         return hit[0]
-    stacked = packed.stack_tenants(
-        prepare_artifact(a, backend=backend) for a in artifacts)
-    if mesh is not None:
-        import jax
-        stacked = jax.device_put(
-            stacked, stacked.tenant_shardings(mesh, rules))
+    rec.counter("prep.cache_miss").inc()
+    with rec.span("prep.stack_tenants", tenants=len(artifacts),
+                  sharded=mesh is not None):
+        stacked = packed.stack_tenants(
+            prepare_artifact(a, backend=backend) for a in artifacts)
+        if mesh is not None:
+            import jax
+            stacked = jax.device_put(
+                stacked, stacked.tenant_shardings(mesh, rules))
     cache[key] = (stacked, artifacts)   # pin the ids the key ranges over
     return stacked
 

@@ -34,6 +34,8 @@ from repro.configs.base import ARCH_IDS, SHAPES, get_config, shapes_for
 from repro.dist import sharding as sh
 from repro.launch import hlo_cost, specs, steps
 from repro.launch.mesh import make_production_mesh
+from repro.obs import jaxhooks as obs_jaxhooks
+from repro.obs import registry as obs_registry
 from repro.train import optimizer as opt_lib
 
 # the uleen bonus-cell shapes (run_uleen_cell + CLI validation share this).
@@ -46,10 +48,18 @@ ULEEN_SHAPES = ("train_mnist_scale", "train_host_exec", "infer_mnist_scale",
 
 
 def lower_cell(cfg, shape, mesh, *, extra_flags: dict | None = None):
-    """Build + lower + compile one cell; returns (record, compiled)."""
+    """Build + lower + compile one cell; returns (record, compiled).
+
+    Lower and compile wall times are recorded as `dryrun.lower` /
+    `dryrun.compile` spans carrying a `cell` attribute (DESIGN §12), so
+    the sweep's METRICS.json breaks compile cost out per cell; the
+    jax.aot_lower/jax.aot_compile counters give the sweep-wide totals.
+    """
     rules = sh.TRAIN_RULES if shape.kind == "train" else sh.SERVE_RULES
-    t0 = time.time()
-    with sh.use_mesh(mesh, rules):
+    rec = obs_registry.get_recorder()
+    cell_tag = f"{cfg.name}.{shape.name}"
+    with sh.use_mesh(mesh, rules), \
+            rec.span("dryrun.lower", cell=cell_tag) as sp_lower:
         if shape.kind == "train":
             optimizer = opt_lib.adamw(1e-4)
             micro = specs.microbatches_for(cfg, shape, mesh)
@@ -100,11 +110,14 @@ def lower_cell(cfg, shape, mesh, *, extra_flags: dict | None = None):
                          out_shardings=(lshard, sshard),
                          donate_argnums=(2,))
             lowered = fn.lower(pspec, bspec["token"], sspec)
-        t_lower = time.time() - t0
+    t_lower = sp_lower.dur_s
+    rec.counter("jax.aot_lower").inc()
 
-        t0 = time.time()
+    with sh.use_mesh(mesh, rules), \
+            rec.span("dryrun.compile", cell=cell_tag) as sp_compile:
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+    t_compile = sp_compile.dur_s
+    rec.counter("jax.aot_compile").inc()
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
@@ -168,10 +181,13 @@ def run_uleen_exec_cell(multi_pod: bool, out_dir: str | None, *,
     mesh = make_mesh((2, 4), ("pod", "data"))
     tag = f"uleen_exec.train_host_exec.{'pod2' if multi_pod else 'pod1'}"
     spec = uleen_cell.ULEEN_EXEC_SPEC
+    rec = obs_registry.get_recorder()
     try:
-        t0 = time.time()
-        compiled = uleen_cell.lower_uleen_dist_cell(mesh, compress=True)
-        t_compile = time.time() - t0
+        with rec.span("dryrun.compile", cell=tag) as sp:
+            compiled = uleen_cell.lower_uleen_dist_cell(mesh, compress=True)
+        t_compile = sp.dur_s
+        rec.counter("jax.aot_lower").inc()
+        rec.counter("jax.aot_compile").inc()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         # paper-style WNN op count (hash XORs + lookups + popcount adds),
@@ -185,14 +201,13 @@ def run_uleen_exec_cell(multi_pod: bool, out_dir: str | None, *,
                                       mesh.devices.size, mflops)
 
         parity = train_mod.uleen_parity_probe(mesh, steps=2)
-        sp, statics, bits, labels = train_mod.uleen_smoke_problem(
-            0, n_train=1024)
-        t0 = time.time()
-        out = train_mod.train_uleen(sp, statics, bits, labels,
-                                    steps_total=3, global_batch=256,
-                                    mesh=mesh, compress=True,
-                                    verbose=False)
-        t_exec = time.time() - t0
+        problem = train_mod.uleen_smoke_problem(0, n_train=1024)
+        with rec.span("dryrun.exec", cell=tag) as sp_exec:
+            out = train_mod.train_uleen(*problem,
+                                        steps_total=3, global_batch=256,
+                                        mesh=mesh, compress=True,
+                                        verbose=False)
+        t_exec = sp_exec.dur_s
         losses = [h["loss"] for h in out["history"]]
         finite = all(jnp.isfinite(jnp.asarray(losses)).tolist())
 
@@ -298,23 +313,26 @@ def run_uleen_cell(multi_pod: bool, out_dir: str | None, *,
     kernel_mode = ("mosaic" if resolved in ("fused", "packed") and on_tpu
                    else "interpret" if backend in ("fused", "packed")
                    else "xla")
+    rec = obs_registry.get_recorder()
     try:
-        t0 = time.time()
-        if multitenant_cell:
-            compiled = uleen_cell.lower_uleen_multitenant_infer_cell(
-                mesh, backend=backend)
-        elif sharded_cell:
-            compiled = uleen_cell.lower_uleen_sharded_infer_cell(
-                mesh, backend=backend)
-        elif packed_cell:
-            compiled = uleen_cell.lower_uleen_packed_infer_cell(
-                mesh, backend=backend)
-        elif infer:
-            compiled = uleen_cell.lower_uleen_infer_cell(mesh,
-                                                         backend=backend)
-        else:
-            compiled = uleen_cell.lower_uleen_cell(mesh)
-        t_compile = time.time() - t0
+        with rec.span("dryrun.compile", cell=tag) as sp:
+            if multitenant_cell:
+                compiled = uleen_cell.lower_uleen_multitenant_infer_cell(
+                    mesh, backend=backend)
+            elif sharded_cell:
+                compiled = uleen_cell.lower_uleen_sharded_infer_cell(
+                    mesh, backend=backend)
+            elif packed_cell:
+                compiled = uleen_cell.lower_uleen_packed_infer_cell(
+                    mesh, backend=backend)
+            elif infer:
+                compiled = uleen_cell.lower_uleen_infer_cell(mesh,
+                                                             backend=backend)
+            else:
+                compiled = uleen_cell.lower_uleen_cell(mesh)
+        t_compile = sp.dur_s
+        rec.counter("jax.aot_lower").inc()
+        rec.counter("jax.aot_compile").inc()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         spec = (uleen_cell.ULN_S_SPEC if multitenant_cell
@@ -528,6 +546,12 @@ def main(argv=None) -> int:
                          "over every compiled cell; error findings flip "
                          "the cell to ok:false and fail the sweep")
     ap.add_argument("--out", default=None, help="JSON output dir")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="where to write the sweep's obsmetrics/v1 "
+                         "METRICS.json (per-cell lower/compile spans, "
+                         "AOT counters, device-memory gauges). Default: "
+                         "<--out>/METRICS.json, or ./METRICS.json when "
+                         "--out is not given")
     args = ap.parse_args(argv)
 
     cells = []
@@ -552,13 +576,27 @@ def main(argv=None) -> int:
               "both": [False, True]}[args.mesh]
     failures = 0
     records = {}
-    for arch, shp in cells:
-        for mp in meshes:
-            rec = run_cell(arch, shp, mp, args.out, backend=args.backend,
-                           analyze=args.analyze)
-            tag = f"{rec['arch']}.{shp}.{'pod2' if mp else 'pod1'}"
-            records[tag] = rec
-            failures += 0 if rec.get("ok") else 1
+    # every sweep runs under a real obs recorder (DESIGN §12): per-cell
+    # lower/compile spans, AOT counters, device-memory gauges — written
+    # out as a schema-checked obsmetrics/v1 METRICS.json next to the
+    # per-cell records, diffed nightly by scripts/diff_metrics.py
+    with obs_registry.recording() as obs_rec:
+        for arch, shp in cells:
+            for mp in meshes:
+                rec = run_cell(arch, shp, mp, args.out,
+                               backend=args.backend, analyze=args.analyze)
+                tag = f"{rec['arch']}.{shp}.{'pod2' if mp else 'pod1'}"
+                records[tag] = rec
+                failures += 0 if rec.get("ok") else 1
+        obs_jaxhooks.record_device_memory(obs_rec)
+        metrics_path = args.metrics_out or os.path.join(
+            args.out if args.out else ".", "METRICS.json")
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+        obs_rec.write(metrics_path)
+        print(f"[dryrun] metrics: {len(obs_rec.spans)} spans, "
+              f"{int(obs_rec.counters['jax.aot_compile'].value)} compiles "
+              f"-> {metrics_path}")
     if args.analyze:
         from repro.analysis import registry
         doc = registry.report_json({

@@ -42,6 +42,9 @@ from repro.dist import sharding as sh
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer
+from repro.obs import jaxhooks as obs_jaxhooks
+from repro.obs import metrics as obs_metrics
+from repro.obs import registry as obs_registry
 
 
 class SlotState(enum.Enum):
@@ -87,18 +90,6 @@ class RequestResult:
     @property
     def queue_wait(self) -> float:
         return self.t_admit - self.t_submit
-
-
-def _median(sorted_vals) -> float:
-    """Proper p50 of an ascending sequence: the middle element for odd
-    lengths, the mean of the two middle elements for even lengths —
-    `vals[len // 2]` alone is the *upper* middle, biased high on every
-    even-sized sample."""
-    n = len(sorted_vals)
-    mid = n // 2
-    if n % 2:
-        return sorted_vals[mid]
-    return 0.5 * (sorted_vals[mid - 1] + sorted_vals[mid])
 
 
 @dataclasses.dataclass
@@ -158,23 +149,24 @@ class Engine:
 
         # trace-time side effects: these counters move only when jax traces
         # (== compiles) a new program, so tests can assert the warm engine
-        # never recompiles.
+        # never recompiles. Mirrored into the global obs recorder as
+        # jax.trace.* counters (DESIGN §12) by the counted() wrapper.
         self.trace_counts: collections.Counter = collections.Counter()
+        self.lat_hist = obs_metrics.Histogram()
+        self.queue_hist = obs_metrics.Histogram()
 
         prefill = steps.make_slot_prefill_step(cfg, max_len=max_len)
         decode = steps.make_masked_decode_step(cfg)
 
-        def _prefill(params, batch, length, slot, state):
-            self.trace_counts[
-                f"prefill_{batch['tokens'].shape[1]}"] += 1
-            return prefill(params, batch, length, slot, state)
-
-        def _decode(params, token, state, active):
-            self.trace_counts["decode"] += 1
-            return decode(params, token, state, active)
-
-        self._prefill = jax.jit(_prefill, donate_argnums=(4,))
-        self._decode = jax.jit(_decode, donate_argnums=(2,))
+        self._prefill = jax.jit(
+            obs_jaxhooks.counted(
+                prefill, self.trace_counts,
+                lambda params, batch, *a: f"prefill_{batch['tokens'].shape[1]}",
+                agg_key="prefill"),
+            donate_argnums=(4,))
+        self._decode = jax.jit(
+            obs_jaxhooks.counted(decode, self.trace_counts, "decode"),
+            donate_argnums=(2,))
 
         with sh.use_mesh(self.mesh, self.rules):
             self.state = steps.serve_state_zeros(cfg, params, slots, max_len)
@@ -242,6 +234,7 @@ class Engine:
             if sl.state is SlotState.DRAIN:
                 sl.state = SlotState.FREE
                 sl.request = sl.result = None
+        rec = obs_registry.get_recorder()
         for i, sl in enumerate(self.slots):
             if not self.queue or sl.state is not SlotState.FREE:
                 continue
@@ -252,6 +245,8 @@ class Engine:
             sl.result = res
             sl.key = jax.random.fold_in(self._base_key, req.rid)
             res.t_admit = self.clock()
+            self.queue_hist.observe(res.queue_wait)
+            rec.histogram("serve.engine.queue_wait_s").observe(res.queue_wait)
 
             plen = self._padded_len(req.prompt_len)
             toks = np.zeros((1, plen), np.int32)
@@ -261,12 +256,13 @@ class Engine:
                 batch["frames"] = jnp.asarray(req.frames)[None]
             if req.patches is not None:
                 batch["patches"] = jnp.asarray(req.patches)[None]
-            with sh.use_mesh(self.mesh, self.rules):
-                logits, self.state = self._prefill(
-                    self.params, batch,
-                    jnp.asarray(req.prompt_len, jnp.int32),
-                    jnp.asarray(i, jnp.int32), self.state)
-            tok = self._select(logits[0, -1], sl)
+            with rec.span("engine.prefill", rid=req.rid, slot=i, plen=plen):
+                with sh.use_mesh(self.mesh, self.rules):
+                    logits, self.state = self._prefill(
+                        self.params, batch,
+                        jnp.asarray(req.prompt_len, jnp.int32),
+                        jnp.asarray(i, jnp.int32), self.state)
+                tok = self._select(logits[0, -1], sl)
             res.tokens.append(tok)
             res.t_first = self.clock()
             self._next_tok[i] = tok
@@ -278,6 +274,9 @@ class Engine:
         if len(sl.result.tokens) >= sl.request.max_new:
             sl.result.t_done = self.clock()
             sl.state = SlotState.DRAIN
+            self.lat_hist.observe(sl.result.latency)
+            obs_registry.get_recorder().histogram(
+                "serve.engine.latency_s").observe(sl.result.latency)
 
     def step(self) -> int:
         """One engine step: admissions, then one masked decode over every
@@ -288,10 +287,12 @@ class Engine:
         self.peak_active = max(self.peak_active, int(active.sum()))
         if not active.any():
             return 0
-        with sh.use_mesh(self.mesh, self.rules):
-            logits, self.state = self._decode(
-                self.params, jnp.asarray(self._next_tok[:, None]),
-                self.state, jnp.asarray(active))
+        rec = obs_registry.get_recorder()
+        with rec.span("engine.decode", active=int(active.sum())):
+            with sh.use_mesh(self.mesh, self.rules):
+                logits, self.state = self._decode(
+                    self.params, jnp.asarray(self._next_tok[:, None]),
+                    self.state, jnp.asarray(active))
         self.step_count += 1
         emitted = 0
         last = logits[:, -1]
@@ -345,27 +346,35 @@ class Engine:
         """Aggregate serving stats. The key set is STABLE: every key is
         present on an empty engine too (latencies as None, counters as 0)
         — downstream consumers (scenario harness, nightly diff) index the
-        schema unconditionally, so it must never shrink with traffic."""
+        schema unconditionally, so it must never shrink with traffic.
+
+        Latency quantiles come from the engine's fixed-bucket histogram
+        (`repro.obs.metrics.Histogram`, DESIGN §12): p50/p99 are bucket
+        upper edges clamped into the exact [min, max] envelope (~12%
+        resolution), mean and max are exact. `queue_wait_mean_s` averages
+        over *admitted* requests (it is observed at admission time)."""
         done = [r for r in self.results.values() if r.t_done is not None]
+        h = self.lat_hist
         if not done:
             return {
                 "requests": 0, "tokens": 0, "tok_per_s": 0.0,
                 "latency_mean_s": None, "latency_p50_s": None,
-                "latency_max_s": None, "queue_wait_mean_s": None,
+                "latency_p99_s": None, "latency_max_s": None,
+                "queue_wait_mean_s": None,
                 "decode_steps": self.step_count,
                 "peak_active": self.peak_active,
             }
-        lat = sorted(r.latency for r in done)
         toks = sum(len(r.tokens) for r in done)
         span = max(r.t_done for r in done) - min(r.t_submit for r in done)
         return {
             "requests": len(done),
             "tokens": toks,
             "tok_per_s": toks / span if span > 0 else float("inf"),
-            "latency_mean_s": sum(lat) / len(lat),
-            "latency_p50_s": _median(lat),
-            "latency_max_s": lat[-1],
-            "queue_wait_mean_s": sum(r.queue_wait for r in done) / len(done),
+            "latency_mean_s": h.mean,
+            "latency_p50_s": h.quantile(0.5),
+            "latency_p99_s": h.quantile(0.99),
+            "latency_max_s": h.max,
+            "queue_wait_mean_s": self.queue_hist.mean,
             "decode_steps": self.step_count,
             "peak_active": self.peak_active,
         }
@@ -431,9 +440,9 @@ class WnnBatcher:
         self.class_shards = 1 if mesh is None else sh.class_partition(
             mesh, int(artifact.num_classes), self.rules)[1]
         self.trace_counts: collections.Counter = collections.Counter()
+        self.lat_hist = obs_metrics.Histogram()
 
         def _batch_scores(prep, bits):
-            self.trace_counts["batch_scores"] += 1
             # THE serve loop, shared with artifact_scores — semantics
             # cannot drift between the one-shot and batch paths. The
             # predict tail gathers the class-sharded partial columns
@@ -441,6 +450,9 @@ class WnnBatcher:
             scores, _ = export_mod.predict_from_prep(prep, bits,
                                                      backend=backend)
             return scores
+
+        _batch_scores = obs_jaxhooks.counted(
+            _batch_scores, self.trace_counts, "batch_scores")
 
         if mesh is None:
             self._scores = jax.jit(_batch_scores)
@@ -476,6 +488,7 @@ class WnnBatcher:
         returns the number served (0 when idle)."""
         if not self.queue:
             return 0
+        rec = obs_registry.get_recorder()
         take = min(self.slots, len(self.queue))
         batch = np.zeros((self.slots, self.total_bits), np.uint8)
         rids = []
@@ -483,19 +496,24 @@ class WnnBatcher:
             rid, bits = self.queue.popleft()
             batch[i] = bits
             rids.append(rid)
-        if self.mesh is None:
-            scores = np.asarray(self._scores(self._prep, jnp.asarray(batch)))
-        else:
-            with sh.use_mesh(self.mesh, self.rules):
-                scores = np.asarray(self._scores(
-                    self._prep,
-                    jax.device_put(batch, self._bits_sharding)))
+        with rec.span("wnn.batch", take=take):
+            if self.mesh is None:
+                scores = np.asarray(
+                    self._scores(self._prep, jnp.asarray(batch)))
+            else:
+                with sh.use_mesh(self.mesh, self.rules):
+                    scores = np.asarray(self._scores(
+                        self._prep,
+                        jax.device_put(batch, self._bits_sharding)))
         t = self.clock()
+        lat_hist_global = rec.histogram("serve.wnn.latency_s")
         for i, rid in enumerate(rids):
             res = self.results[rid]
             res.scores = scores[i]
             res.pred = int(np.argmax(scores[i]))
             res.t_done = t
+            self.lat_hist.observe(res.latency)
+            lat_hist_global.observe(res.latency)
         self.batches += 1
         self.served += take
         return take
@@ -509,21 +527,22 @@ class WnnBatcher:
     def stats(self) -> dict:
         """Batch-serving stats; stable key set (latencies None when
         nothing finished yet — the schema never shrinks, like
-        `Engine.stats`)."""
+        `Engine.stats`). Quantiles come from the fixed-bucket latency
+        histogram (DESIGN §12): bucket-resolution p50/p99, exact
+        mean/max."""
         done = [r for r in self.results.values() if r.t_done is not None]
         occupancy = self.served / max(1, self.batches * self.slots)
-        out = {"requests": len(done), "batches": self.batches,
-               "submitted": self._next_rid, "served": self.served,
-               "queued": len(self.queue),
-               "class_shards": self.class_shards,
-               "occupancy": occupancy,
-               "traces": int(self.trace_counts["batch_scores"]),
-               "latency_p50_s": None, "latency_max_s": None}
-        if done:
-            lat = sorted(r.latency for r in done)
-            out["latency_p50_s"] = _median(lat)
-            out["latency_max_s"] = lat[-1]
-        return out
+        h = self.lat_hist
+        return {"requests": len(done), "batches": self.batches,
+                "submitted": self._next_rid, "served": self.served,
+                "queued": len(self.queue),
+                "class_shards": self.class_shards,
+                "occupancy": occupancy,
+                "traces": int(self.trace_counts["batch_scores"]),
+                "latency_mean_s": h.mean,
+                "latency_p50_s": h.quantile(0.5),
+                "latency_p99_s": h.quantile(0.99),
+                "latency_max_s": h.max}
 
 
 @dataclasses.dataclass
@@ -593,6 +612,7 @@ class WnnTenantBatcher:
         self.rules = sh.SERVE_RULES
         self.clock = clock or time.perf_counter
         self.trace_counts: collections.Counter = collections.Counter()
+        self.lat_hist = obs_metrics.Histogram()
 
         self.total_bits: Optional[int] = None
         self._tenants: list = []           # tid -> prepared PackedTables
@@ -647,7 +667,11 @@ class WnnTenantBatcher:
         tid = len(self._tenants)
         self._tenants.append(prep)
         self._artifacts.append(artifact)
-        self.per_tenant[tid] = {"requests": 0, "batches": 0, "lat": []}
+        # per-tenant latency is a fixed-bucket histogram, not a raw list:
+        # on a long-lived server the old lists grew with *traffic*
+        # per tenant, unbounded (DESIGN §12)
+        self.per_tenant[tid] = {"requests": 0, "batches": 0,
+                                "hist": obs_metrics.Histogram()}
         return tid
 
     def _build(self, template):
@@ -658,15 +682,16 @@ class WnnTenantBatcher:
         stack = layout.stacked_zeros(template, self.capacity)
 
         def _batch_scores(st, bits, sids):
-            self.trace_counts["batch_scores"] += 1
             # slot-indexed fleet scoring — THE serve loop of the stacked
             # path, shared with the dryrun cell via stacked_predict
             scores, _ = runtime.stacked_predict(st, bits, sids,
                                                 backend=backend)
             return scores
 
+        _batch_scores = obs_jaxhooks.counted(
+            _batch_scores, self.trace_counts, "batch_scores")
+
         def _install(st, pt, slot):
-            self.trace_counts["install"] += 1
             return layout.StackedPackedTables(
                 words=tuple(w.at[slot].set(v)
                             for w, v in zip(st.words, pt.words)),
@@ -680,7 +705,9 @@ class WnnTenantBatcher:
                 entries=st.entries, num_classes=st.num_classes,
                 num_tenants=st.num_tenants)
 
-        self._install = jax.jit(_install, donate_argnums=(0,))
+        self._install = jax.jit(
+            obs_jaxhooks.counted(_install, self.trace_counts, "install"),
+            donate_argnums=(0,))
         if self.mesh is None:
             self._stack = stack
             self._scores = jax.jit(_batch_scores)
@@ -721,6 +748,7 @@ class WnnTenantBatcher:
         """Install tenant `tid` into a slot: a free one, else the LRU
         resident not pinned by the forming batch. None when every slot is
         pinned (caller defers the request)."""
+        rec = obs_registry.get_recorder()
         free = [s for s, t in enumerate(self._slot_tid) if t is None]
         if free:
             slot = free[0]
@@ -732,11 +760,14 @@ class WnnTenantBatcher:
             slot = self._resident.pop(victim)
             del self._lru[victim]
             self.evictions += 1
-        self._stack = self._install(self._stack, self._tenants[tid],
-                                    jnp.asarray(slot, jnp.int32))
+            rec.counter("serve.tenant.eviction").inc()
+        with rec.span("tenant.install", tid=tid, slot=slot):
+            self._stack = self._install(self._stack, self._tenants[tid],
+                                        jnp.asarray(slot, jnp.int32))
         self._slot_tid[slot] = tid
         self._resident[tid] = slot
         self.admissions += 1
+        rec.counter("serve.tenant.admission").inc()
         return slot
 
     def step(self) -> int:
@@ -746,6 +777,7 @@ class WnnTenantBatcher:
         batch's tenants defer (in order) to the queue head."""
         if not self.queue:
             return 0
+        rec = obs_registry.get_recorder()
         take: list = []
         deferred: list = []
         batch_tenants: set = set()
@@ -754,6 +786,7 @@ class WnnTenantBatcher:
             slot = self._resident.get(tid)
             if slot is not None:
                 self.hits += 1
+                rec.counter("serve.tenant.cache_hit").inc()
             else:
                 slot = self._admit(tid, batch_tenants)
                 if slot is None:
@@ -762,6 +795,7 @@ class WnnTenantBatcher:
                     deferred.append((rid, tid, bits))
                     continue
                 self.misses += 1
+                rec.counter("serve.tenant.cache_miss").inc()
             batch_tenants.add(tid)
             take.append((rid, tid, bits, slot))
         for item in reversed(deferred):
@@ -772,24 +806,29 @@ class WnnTenantBatcher:
         for i, (_rid, _tid, bits, slot) in enumerate(take):
             batch[i] = bits
             sids[i] = slot
-        if self.mesh is None:
-            scores = np.asarray(self._scores(
-                self._stack, jnp.asarray(batch), jnp.asarray(sids)))
-        else:
-            with sh.use_mesh(self.mesh, self.rules):
+        with rec.span("wnn.tenant_batch", take=len(take),
+                      tenants=len(batch_tenants)):
+            if self.mesh is None:
                 scores = np.asarray(self._scores(
-                    self._stack,
-                    jax.device_put(batch, self._bits_sharding),
-                    jax.device_put(sids, self._sids_sharding)))
+                    self._stack, jnp.asarray(batch), jnp.asarray(sids)))
+            else:
+                with sh.use_mesh(self.mesh, self.rules):
+                    scores = np.asarray(self._scores(
+                        self._stack,
+                        jax.device_put(batch, self._bits_sharding),
+                        jax.device_put(sids, self._sids_sharding)))
         t = self.clock()
+        lat_hist_global = rec.histogram("serve.tenant.latency_s")
         for i, (rid, tid, _bits, _slot) in enumerate(take):
             res = self.results[rid]
             res.scores = scores[i]
             res.pred = int(np.argmax(scores[i]))
             res.t_done = t
+            self.lat_hist.observe(res.latency)
+            lat_hist_global.observe(res.latency)
             pt = self.per_tenant[tid]
             pt["requests"] += 1
-            pt["lat"].append(res.latency)
+            pt["hist"].observe(res.latency)
         for tid in batch_tenants:
             self.per_tenant[tid]["batches"] += 1
             self._lru[tid] = None
@@ -810,6 +849,7 @@ class WnnTenantBatcher:
         breakdown: requests, latency mean/p50, launches the tenant rode
         in, and its occupancy share of total launch capacity."""
         done = [r for r in self.results.values() if r.t_done is not None]
+        h = self.lat_hist
         out = {"requests": len(done), "batches": self.batches,
                "submitted": self._next_rid, "served": self.served,
                "queued": len(self.queue),
@@ -822,21 +862,21 @@ class WnnTenantBatcher:
                "occupancy": self.served / max(1, self.batches * self.slots),
                "traces": int(self.trace_counts["batch_scores"]),
                "install_traces": int(self.trace_counts["install"]),
-               "latency_p50_s": None, "latency_max_s": None,
+               "latency_mean_s": h.mean,
+               "latency_p50_s": h.quantile(0.5),
+               "latency_p99_s": h.quantile(0.99),
+               "latency_max_s": h.max,
                "per_tenant": {}}
-        if done:
-            lat = sorted(r.latency for r in done)
-            out["latency_p50_s"] = _median(lat)
-            out["latency_max_s"] = lat[-1]
         cap = max(1, self.batches * self.slots)
         for tid, pt in self.per_tenant.items():
-            lat = sorted(pt["lat"])
+            th = pt["hist"]
             out["per_tenant"][tid] = {
                 "requests": pt["requests"],
                 "batches": pt["batches"],
                 "occupancy": pt["requests"] / cap,
-                "latency_mean_s": sum(lat) / len(lat) if lat else None,
-                "latency_p50_s": _median(lat) if lat else None,
+                "latency_mean_s": th.mean,
+                "latency_p50_s": th.quantile(0.5),
+                "latency_p99_s": th.quantile(0.99),
             }
         return out
 

@@ -18,6 +18,7 @@ shardings).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import sys
 import time
 
@@ -29,6 +30,9 @@ from repro.dist import sharding as sh
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer
+from repro.obs import jaxhooks as obs_jaxhooks
+from repro.obs import registry as obs_registry
+from repro.obs.metrics import fmt_seconds as _fmt_s
 
 
 def serve(cfg, params, prompts, *, max_len: int, gen: int,
@@ -75,16 +79,19 @@ def serve_stream(cfg, params, requests, *, slots: int, max_len: int,
     results = eng.run(requests, realtime=realtime)
     if verbose:
         st = eng.stats()
-        if not st["requests"]:
-            print(f"[serve] {cfg.name}: no requests completed")
-            return results, eng
+        # every latency field is a None sentinel until a request
+        # completes (stable stats schema) — the print must be None-safe,
+        # not crash with a TypeError on an idle/zero-request run
         print(f"[serve] {cfg.name}: {st['requests']} requests, "
               f"{st['tokens']} tokens in {st['decode_steps']} decode steps "
               f"({st['tok_per_s']:.1f} tok/s, peak {st['peak_active']}/"
               f"{slots} slots)")
-        print(f"[serve] latency mean/p50/max = {st['latency_mean_s']:.3f}/"
-              f"{st['latency_p50_s']:.3f}/{st['latency_max_s']:.3f} s, "
-              f"queue wait mean = {st['queue_wait_mean_s']:.3f} s")
+        print(f"[serve] latency mean/p50/p99/max = "
+              f"{_fmt_s(st['latency_mean_s'])}/"
+              f"{_fmt_s(st['latency_p50_s'])}/"
+              f"{_fmt_s(st['latency_p99_s'])}/"
+              f"{_fmt_s(st['latency_max_s'])} s, queue wait mean = "
+              f"{_fmt_s(st['queue_wait_mean_s'])} s")
     return results, eng
 
 
@@ -106,6 +113,13 @@ def main(argv=None) -> int:
                     help="[--stream] Poisson arrival rate, req/s")
     ap.add_argument("--slots", type=int, default=None,
                     help="[--stream] cache slots (default: --batch)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the run in a jax.profiler trace written to "
+                         "DIR (TensorBoard/Perfetto viewable; DESIGN §12)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write an obsmetrics/v1 METRICS.json snapshot of "
+                         "the run (latency histograms, retrace counters, "
+                         "prefill/decode spans) to PATH")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -115,39 +129,56 @@ def main(argv=None) -> int:
     k_param, k_prompt, k_frames, k_patches = jax.random.split(key, 4)
     params = transformer.init_params(cfg, k_param, dtype=jnp.float32)
 
-    if args.stream:
-        from repro.launch.scheduler import synth_request_stream
-        # patch tokens prepend to the decoder sequence -> cache rows
-        max_len = (cfg.patch_tokens or 0) + args.prompt_len + args.gen + 1
-        reqs = synth_request_stream(
-            cfg, args.requests, rate=args.rate, seed=args.seed,
-            prompt_lens=(max(1, args.prompt_len // 2), args.prompt_len),
-            gen_lens=(max(1, args.gen // 2), args.gen))
-        serve_stream(cfg, params, reqs, slots=args.slots or args.batch,
-                     max_len=max_len)
+    def _run() -> int:
+        if args.stream:
+            from repro.launch.scheduler import synth_request_stream
+            # patch tokens prepend to the decoder sequence -> cache rows
+            max_len = (cfg.patch_tokens or 0) + args.prompt_len + args.gen + 1
+            reqs = synth_request_stream(
+                cfg, args.requests, rate=args.rate, seed=args.seed,
+                prompt_lens=(max(1, args.prompt_len // 2), args.prompt_len),
+                gen_lens=(max(1, args.gen // 2), args.gen))
+            serve_stream(cfg, params, reqs, slots=args.slots or args.batch,
+                         max_len=max_len)
+            return 0
+
+        prompts = jax.random.randint(
+            k_prompt, (args.batch, args.prompt_len), 0, cfg.vocab_size,
+            jnp.int32)
+        kwargs = {}
+        if cfg.encoder_layers:
+            kwargs["frames"] = jax.random.normal(
+                k_frames, (args.batch, cfg.encoder_frames,
+                           cfg.d_model)) * 0.02
+        if cfg.patch_tokens:
+            kwargs["patches"] = jax.random.normal(
+                k_patches, (args.batch, cfg.patch_tokens,
+                            cfg.d_model)) * 0.02
+
+        t0 = time.time()
+        toks = serve(cfg, params, prompts,
+                     max_len=(cfg.patch_tokens or 0) + args.prompt_len
+                     + args.gen + 1,
+                     gen=args.gen, **kwargs)
+        dt = time.time() - t0
+        print(f"[serve] {cfg.name}: generated {toks.shape} in {dt:.2f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s)")
+        print("[serve] sample:", toks[0, :12].tolist())
         return 0
 
-    prompts = jax.random.randint(
-        k_prompt, (args.batch, args.prompt_len), 0, cfg.vocab_size,
-        jnp.int32)
-    kwargs = {}
-    if cfg.encoder_layers:
-        kwargs["frames"] = jax.random.normal(
-            k_frames, (args.batch, cfg.encoder_frames, cfg.d_model)) * 0.02
-    if cfg.patch_tokens:
-        kwargs["patches"] = jax.random.normal(
-            k_patches, (args.batch, cfg.patch_tokens, cfg.d_model)) * 0.02
-
-    t0 = time.time()
-    toks = serve(cfg, params, prompts,
-                 max_len=(cfg.patch_tokens or 0) + args.prompt_len
-                 + args.gen + 1,
-                 gen=args.gen, **kwargs)
-    dt = time.time() - t0
-    print(f"[serve] {cfg.name}: generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("[serve] sample:", toks[0, :12].tolist())
-    return 0
+    with contextlib.ExitStack() as stack:
+        rec = None
+        if args.metrics_out:
+            rec = stack.enter_context(obs_registry.recording())
+        stack.enter_context(obs_jaxhooks.profile_trace(args.profile))
+        rc = _run()
+        if rec is not None:
+            obs_jaxhooks.record_device_memory(rec)
+            rec.write(args.metrics_out)
+            print(f"[serve] metrics: {len(rec.spans)} spans, "
+                  f"{sum(c.value for c in rec.counters.values())} counter "
+                  f"events -> {args.metrics_out}")
+    return rc
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ tests/test_distributed_training.py drives exactly this entry point:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import sys
 import time
@@ -37,6 +38,8 @@ from repro.launch import specs, steps
 from repro.launch.mesh import (make_host_mesh, make_mesh,
                                make_production_mesh)
 from repro.models import transformer
+from repro.obs import jaxhooks as obs_jaxhooks
+from repro.obs import registry as obs_registry
 from repro.train import checkpoint, fault
 from repro.train import optimizer as opt_lib
 
@@ -88,9 +91,12 @@ def train(cfg, *, steps_total: int, batch: int, seq: int,
                             out_shardings=specs.opt_shardings(
                                 cfg, optimizer, mesh, rules))(params)
 
+    rec = obs_registry.get_recorder()
     start = 0
     if ckpt_dir and restore == "auto":
-        restored, at = checkpoint.restore_latest(ckpt_dir, (params, opt_state))
+        with rec.span("ckpt.restore"):
+            restored, at = checkpoint.restore_latest(
+                ckpt_dir, (params, opt_state))
         if restored is not None:
             params, opt_state = restored
             start = at
@@ -111,7 +117,8 @@ def train(cfg, *, steps_total: int, batch: int, seq: int,
             monitor.start()
             params, opt_state, metrics = jit_step(params, opt_state, data)
             metrics = {k: float(v) for k, v in metrics.items()}
-            ev = monitor.stop(step)
+            ev = monitor.stop(step)   # observes train.step_s (DESIGN §12)
+            rec.counter("train.steps").inc()
             history.append({"step": step, **metrics})
             if verbose and (step % log_every == 0 or step == steps_total - 1):
                 print(f"[train] step {step}: loss={metrics['loss']:.4f} "
@@ -121,14 +128,17 @@ def train(cfg, *, steps_total: int, batch: int, seq: int,
             if guard is not None and guard.preempted:
                 want_ckpt, preempted = bool(ckpt_dir), True
             if want_ckpt:
-                checkpoint.save(ckpt_dir, step + 1, (params, opt_state))
+                with rec.span("ckpt.save", step=step + 1):
+                    checkpoint.save(ckpt_dir, step + 1, (params, opt_state))
             if preempted:
                 if verbose:
                     print(f"[train] preempted; checkpointed step {step + 1}")
                 break
     if ckpt_dir and not preempted:
-        checkpoint.save(ckpt_dir, min(steps_total, start + len(history)),
-                        (params, opt_state))
+        with rec.span("ckpt.save", step=min(steps_total,
+                                            start + len(history))):
+            checkpoint.save(ckpt_dir, min(steps_total, start + len(history)),
+                            (params, opt_state))
     return {"params": params, "opt_state": opt_state, "history": history,
             "preempted": preempted,
             "straggler_events": len(monitor.events)}
@@ -201,13 +211,15 @@ def train_uleen(spec, statics, bits_train, labels_train, *,
     params = init_params(jax.random.PRNGKey(seed), spec, init_scale=0.1)
     opt_state = optimizer.init(params)
 
+    rec = obs_registry.get_recorder()
     rep = NamedSharding(mesh, P())
     rep_tree = lambda t: jax.tree.map(lambda _: rep, t)
     start = 0
     if ckpt_dir and restore == "auto":
-        restored, at = checkpoint.restore_latest(
-            ckpt_dir, (params, opt_state),
-            shardings=(rep_tree(params), rep_tree(opt_state)))
+        with rec.span("ckpt.restore"):
+            restored, at = checkpoint.restore_latest(
+                ckpt_dir, (params, opt_state),
+                shardings=(rep_tree(params), rep_tree(opt_state)))
         if restored is not None:
             params, opt_state = restored
             start = at
@@ -244,7 +256,8 @@ def train_uleen(spec, statics, bits_train, labels_train, *,
         params, opt_state, loss, acc = jit_step(
             params, opt_state, statics_t, bits_b, labels_b, rng)
         loss, acc = float(loss), float(acc)
-        ev = monitor.stop(step)
+        ev = monitor.stop(step)   # observes train.step_s + EWMA gauge
+        rec.counter("train.steps").inc()
         if step_delay:
             time.sleep(step_delay)
         history.append({"step": step, "loss": loss, "acc": acc})
@@ -258,14 +271,16 @@ def train_uleen(spec, statics, bits_train, labels_train, *,
         if guard is not None and guard.preempted:
             want_ckpt, preempted = bool(ckpt_dir), True
         if want_ckpt:
-            checkpoint.save(ckpt_dir, step + 1, (params, opt_state),
-                            keep=keep)
+            with rec.span("ckpt.save", step=step + 1):
+                checkpoint.save(ckpt_dir, step + 1, (params, opt_state),
+                                keep=keep)
         if preempted:
             if verbose:
                 print(f"[train] preempted; checkpointed step {step + 1}")
             break
     if ckpt_dir and not preempted and last > start:
-        checkpoint.save(ckpt_dir, last, (params, opt_state), keep=keep)
+        with rec.span("ckpt.save", step=last):
+            checkpoint.save(ckpt_dir, last, (params, opt_state), keep=keep)
     return {"params": params, "opt_state": opt_state, "history": history,
             "preempted": preempted, "resumed_from": start,
             "straggler_events": len(monitor.events)}
@@ -360,26 +375,49 @@ def main(argv=None) -> int:
     ap.add_argument("--step-delay", type=float, default=0.0,
                     help="per-step sleep (the SIGTERM drill's kill window)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the run in a jax.profiler trace written to "
+                         "DIR (TensorBoard/Perfetto viewable; DESIGN §12)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write an obsmetrics/v1 METRICS.json snapshot of "
+                         "the run (step-time histogram, checkpoint spans, "
+                         "straggler EWMA) to PATH")
     args = ap.parse_args(argv)
 
-    if args.arch == "uleen":
-        if args.lr == 3e-4:          # LM default; uleen's paper value
-            args.lr = 1e-3
-        return _main_uleen(args)
+    def _run() -> int:
+        if args.arch == "uleen":
+            return _main_uleen(args)
+        cfg = get_config(args.arch, smoke=args.smoke)
+        mesh = (make_production_mesh() if args.production_mesh
+                else make_host_mesh())
+        with fault.PreemptionGuard() as guard:
+            out = train(cfg, steps_total=args.steps, batch=args.batch,
+                        seq=args.seq, lr=args.lr,
+                        microbatches=args.microbatches, mesh=mesh,
+                        ckpt_dir=args.ckpt_dir, restore=args.restore,
+                        guard=guard)
+        losses = [h["loss"] for h in out["history"]]
+        if losses:
+            print(f"[train] done: first loss {losses[0]:.4f} -> "
+                  f"last {losses[-1]:.4f} over {len(losses)} steps")
+        return 0
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
-    with fault.PreemptionGuard() as guard:
-        out = train(cfg, steps_total=args.steps, batch=args.batch,
-                    seq=args.seq, lr=args.lr,
-                    microbatches=args.microbatches, mesh=mesh,
-                    ckpt_dir=args.ckpt_dir, restore=args.restore,
-                    guard=guard)
-    losses = [h["loss"] for h in out["history"]]
-    if losses:
-        print(f"[train] done: first loss {losses[0]:.4f} -> "
-              f"last {losses[-1]:.4f} over {len(losses)} steps")
-    return 0
+    if args.arch == "uleen" and args.lr == 3e-4:
+        args.lr = 1e-3               # LM default; uleen's paper value
+
+    with contextlib.ExitStack() as stack:
+        rec = None
+        if args.metrics_out:
+            rec = stack.enter_context(obs_registry.recording())
+        stack.enter_context(obs_jaxhooks.profile_trace(args.profile))
+        rc = _run()
+        if rec is not None:
+            obs_jaxhooks.record_device_memory(rec)
+            rec.write(args.metrics_out)
+            print(f"[train] metrics: {len(rec.spans)} spans, "
+                  f"{sum(c.value for c in rec.counters.values())} counter "
+                  f"events -> {args.metrics_out}")
+    return rc
 
 
 if __name__ == "__main__":

@@ -1,0 +1,38 @@
+"""repro.obs — spans, counters, and latency histograms (DESIGN §12).
+
+Dependency-free instrumentation for the serve/train/dryrun hot paths:
+
+* `metrics`  — Counter / Gauge / fixed-bucket Histogram (stdlib only)
+* `trace`    — Span dataclass + JSONL event sink (stdlib only)
+* `registry` — process-global Recorder, `obsmetrics/v1` METRICS.json
+* `jaxhooks` — retrace counting, device-memory gauges, jax.profiler
+               context (the only module here that imports jax — import
+               it explicitly, never via this package root)
+
+Usage (instrumented code):
+
+    from repro.obs import registry as obs
+    rec = obs.get_recorder()          # NullRecorder unless installed
+    rec.counter("serve.tenant.cache_hit").inc()
+    with rec.span("engine.prefill", rid=rid):
+        ...
+
+Usage (CLIs / tests):
+
+    with obs.recording(jsonl_path=p) as rec:
+        run()
+        rec.write("METRICS.json")
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, exact_quantile,
+                               fmt_seconds)
+from repro.obs.registry import (SCHEMA, NullRecorder, Recorder, get_recorder,
+                                load_metrics, recording, set_recorder,
+                                validate_snapshot)
+from repro.obs.trace import JsonlSink, NullSpan, Span, read_jsonl
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "exact_quantile", "fmt_seconds",
+    "SCHEMA", "NullRecorder", "Recorder", "get_recorder", "load_metrics",
+    "recording", "set_recorder", "validate_snapshot",
+    "JsonlSink", "NullSpan", "Span", "read_jsonl",
+]

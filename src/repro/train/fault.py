@@ -18,6 +18,8 @@ import signal
 import time
 from typing import Callable, Optional
 
+from repro.obs import registry as obs_registry
+
 
 class PreemptionGuard:
     def __init__(self, signals=(signal.SIGTERM,)):
@@ -89,4 +91,12 @@ class StragglerMonitor:
                 if self._on:
                     self._on(ev)
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        # every monitored loop exports the step-time histogram + EWMA
+        # gauge for free (DESIGN §12); a NullRecorder makes these no-ops
+        rec = obs_registry.get_recorder()
+        rec.histogram("train.step_s").observe(dt)
+        rec.gauge("train.straggler_ewma_s").set(self.ewma)
+        if ev is not None:
+            rec.counter("train.straggler_events").inc()
+            rec.event("straggler", step=step, duration=dt, ratio=ev.ratio)
         return ev

@@ -269,7 +269,8 @@ def test_engine_stats_empty_returns_full_schema(smoke):
     assert eng.stats() == {
         "requests": 0, "tokens": 0, "tok_per_s": 0.0,
         "latency_mean_s": None, "latency_p50_s": None,
-        "latency_max_s": None, "queue_wait_mean_s": None,
+        "latency_p99_s": None, "latency_max_s": None,
+        "queue_wait_mean_s": None,
         "decode_steps": 0, "peak_active": 0}
 
 
@@ -286,4 +287,21 @@ def test_engine_stats_count_zero_clock_completions(smoke):
     st = eng.stats()
     assert st["requests"] == 2 and st["tokens"] == 8
     assert st["latency_mean_s"] == 0.0 and st["latency_p50_s"] == 0.0
+    assert st["latency_p99_s"] == 0.0
     assert st["latency_max_s"] == 0.0
+
+
+def test_serve_stream_verbose_zero_requests(smoke, capsys):
+    """`serve_stream(verbose=True)` on an EMPTY request stream must print
+    the full stats block with "n/a" latencies, not raise a TypeError
+    formatting the None sentinels (the crash the None-safe `fmt_seconds`
+    formatting fixed)."""
+    from repro.launch.serve import serve_stream
+    cfg, params = smoke
+    results, eng = serve_stream(cfg, params, [], slots=2, max_len=16,
+                                realtime=False, verbose=True)
+    assert results == []
+    out = capsys.readouterr().out
+    assert "0 requests" in out
+    assert "n/a" in out          # latency fields rendered, not crashed
+    assert eng.stats()["latency_p99_s"] is None

@@ -371,21 +371,35 @@ class _Clock:
         return self.t
 
 
-def test_median_even_length_averages_middle_pair():
-    """The 2-element pin: p50 of an even-length series is the mean of the
-    middle pair — the old `lat[len//2]` picked the UPPER element."""
-    from repro.launch.scheduler import _median
-    assert _median([1.0, 3.0]) == 2.0
-    assert _median([1.0, 2.0, 3.0, 10.0]) == 2.5
-    assert _median([5.0]) == 5.0
-    assert _median([1.0, 2.0, 7.0]) == 2.0
+def test_quantiles_come_from_obs_histogram():
+    """Serving quantiles migrated off raw-sample `_median` lists onto
+    `repro.obs.metrics.Histogram` (DESIGN §12): nearest-rank quantiles at
+    bucket resolution, clamped into the exact [min, max] envelope. Pin
+    the contract the stats() surfaces now rely on."""
+    from repro.obs.metrics import Histogram, exact_quantile
+    # nearest-rank oracle the histogram approximates
+    assert exact_quantile([5.0], 0.5) == 5.0
+    assert exact_quantile([1.0, 3.0], 0.5) == 1.0
+    assert exact_quantile([1.0, 2.0, 7.0], 0.5) == 2.0
+    h = Histogram()
+    for v in [1.0, 2.0, 3.0, 10.0]:
+        h.observe(v)
+    lo, hi = h.quantile_bounds(0.5)
+    assert lo <= exact_quantile([1.0, 2.0, 3.0, 10.0], 0.5) <= hi
+    assert h.quantile(0.5) == h.quantile(0.5)  # deterministic
+    assert h.min == 1.0 and h.max == 10.0 and h.mean == 4.0
+    # single-sample histograms are exact (clamped to the envelope)
+    h1 = Histogram()
+    h1.observe(5.0)
+    assert h1.quantile(0.5) == 5.0 and h1.quantile(0.99) == 5.0
 
 
-def test_wnn_batcher_zero_clock_and_even_median():
+def test_wnn_batcher_zero_clock_and_latency_stats():
     """t_done == 0.0 is a COMPLETED request (the old `if r.t_done`
-    truthiness filter dropped it), and an even latency count medians the
-    middle pair."""
+    truthiness filter dropped it), and the histogram-backed stats report
+    an exact mean/max with bucket-resolution quantiles (DESIGN §12)."""
     from repro.launch.scheduler import WnnBatcher
+    from repro.obs.metrics import RESOLUTION
     spec = _spec(8)
     art = _artifact(spec, seed=3)
     row = np.zeros((spec.total_bits,), np.uint8)
@@ -397,6 +411,7 @@ def test_wnn_batcher_zero_clock_and_even_median():
     st0 = zero.stats()
     assert st0["requests"] == 1
     assert st0["latency_p50_s"] == 0.0 and st0["latency_max_s"] == 0.0
+    assert st0["latency_p99_s"] == 0.0
 
     clk = _Clock()
     eng = WnnBatcher(art, slots=4, backend="auto", clock=clk)
@@ -407,7 +422,12 @@ def test_wnn_batcher_zero_clock_and_even_median():
     eng.step()                           # both done at 4.0 -> lats [4, 3]
     st = eng.stats()
     assert st["requests"] == 2
-    assert st["latency_p50_s"] == 3.5 and st["latency_max_s"] == 4.0
+    assert st["latency_mean_s"] == 3.5        # exact (tracked sum/count)
+    assert st["latency_max_s"] == 4.0         # exact (tracked max)
+    # p50 = rank-1 sample (3.0) at bucket resolution, clamped to >= min
+    assert 3.0 <= st["latency_p50_s"] <= 3.0 * RESOLUTION
+    # p99 = rank-2 sample (4.0); the clamp caps it at the exact max
+    assert 4.0 / RESOLUTION <= st["latency_p99_s"] <= 4.0
 
 
 # ---------------------------------------------------------------------------
