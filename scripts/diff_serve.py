@@ -1,0 +1,185 @@
+#!/usr/bin/env python
+"""Diff two bench_serve/v1 BENCH_serve.json files and fail on serving
+regressions.
+
+The nightly CI job runs the full scenario suite
+(`repro.launch.loadgen --suite tests/golden/scenarios`) and compares
+the fresh BENCH_serve.json against the previous nightly's artifact —
+`diff_metrics.py` for the load harness. Gated, per scenario row:
+
+* `latency_p99_s` (and p50) growing past
+  ``new > prev * (1 + tol) + slack`` — the wall-clock gate, with the
+  same absolute slack escape hatch for shared-runner jitter;
+* `peak_cache_rows` growing AT ALL on a paged scenario — block
+  occupancy is deterministic for a fixed workload, so any growth means
+  the allocator started over-reserving (no tolerance);
+* an SLO that flipped from pass to fail.
+
+New/vanished scenarios and throughput are reported informationally.
+Exit 0 when the previous snapshot is missing (first nightly) or nothing
+regresses; 1 otherwise.
+
+    python scripts/diff_serve.py results/nightly results/previous \
+        --tol 0.5 --slack-s 0.1 --md-out "$GITHUB_STEP_SUMMARY"
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+GATED_QUANTILES = ("latency_p50_s", "latency_p99_s")
+
+
+def find_bench(root: str):
+    """Newest schema-valid BENCH_serve.json under `root` (recursing so
+    artifact-download subdirs work); (None, None) when absent."""
+    rootp = pathlib.Path(root)
+    if rootp.is_file():
+        candidates = [rootp]
+    elif rootp.exists():
+        candidates = sorted(rootp.rglob("BENCH_serve.json"))
+    else:
+        candidates = []
+    for path in reversed(candidates):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[diff-serve] skipping {path}: {e}")
+            continue
+        if doc.get("schema") == "bench_serve/v1" and doc.get("rows"):
+            return doc, path
+        print(f"[diff-serve] skipping {path}: not a bench_serve/v1 doc")
+    return None, None
+
+
+def compare(new: dict, prev: dict, tol: float, slack: float) -> list:
+    """One row per (scenario, gated metric); plus SLO flips and paged
+    occupancy growth."""
+    nrows = {r["scenario"]: r for r in new["rows"]}
+    prows = {r["scenario"]: r for r in prev["rows"]}
+    out = []
+    for name in sorted(set(nrows) | set(prows)):
+        if name not in prows:
+            out.append({"scenario": name, "metric": "-", "prev": None,
+                        "new": None, "status": "new"})
+            continue
+        if name not in nrows:
+            out.append({"scenario": name, "metric": "-", "prev": None,
+                        "new": None, "status": "vanished"})
+            continue
+        n, p = nrows[name], prows[name]
+        for q in GATED_QUANTILES:
+            pv, nv = p.get(q), n.get(q)
+            if pv is None or nv is None:
+                continue
+            limit = pv * (1.0 + tol) + slack
+            out.append({"scenario": name, "metric": q, "prev": pv,
+                        "new": nv, "limit": limit,
+                        "status": "regression" if nv > limit else "ok"})
+        if n.get("paged") and p.get("paged"):
+            pv, nv = p["peak_cache_rows"], n["peak_cache_rows"]
+            out.append({"scenario": name, "metric": "peak_cache_rows",
+                        "prev": pv, "new": nv, "limit": pv,
+                        "status": "regression" if nv > pv else "ok"})
+        if p.get("slo_pass") and not n.get("slo_pass"):
+            missed = [k for k, v in n.get("slo", {}).items()
+                      if not v.get("pass")]
+            out.append({"scenario": name, "metric": "slo_pass",
+                        "prev": True, "new": False, "limit": True,
+                        "status": "regression", "missed": missed})
+    return out
+
+
+_MD_MARK = {"ok": "✅", "regression": "❌ regression", "new": "🆕",
+            "vanished": "⚠️ vanished"}
+
+
+def render_markdown(rows: list, tol: float) -> str:
+    def val(v):
+        if v is None:
+            return "–"
+        if isinstance(v, bool):
+            return str(v)
+        return f"{v:.6g}"
+
+    n_reg = sum(r["status"] == "regression" for r in rows)
+    lines = [
+        "## Nightly BENCH_serve.json diff",
+        "",
+        (f"{n_reg} serving metric(s) regressed past +{tol:.0%}" if n_reg
+         else f"All serving metrics within +{tol:.0%} of the previous "
+              "nightly."),
+        "",
+        "| scenario | metric | prev | new | status |",
+        "| --- | --- | ---: | ---: | --- |",
+    ]
+    for r in rows:
+        lines.append(f"| `{r['scenario']}` | {r['metric']} "
+                     f"| {val(r.get('prev'))} | {val(r.get('new'))} "
+                     f"| {_MD_MARK[r['status']]} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new_dir", help="fresh suite output dir (or file)")
+    ap.add_argument("prev_dir", help="previous nightly's artifacts dir")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="relative p50/p99 growth allowed (default 50%% — "
+                         "serve wall clock on shared runners is noisier "
+                         "than the dryrun histograms)")
+    ap.add_argument("--slack-s", type=float, default=0.1,
+                    help="absolute slack in seconds added to the gate")
+    ap.add_argument("--md-out", default=None,
+                    help="append the diff as a markdown table to this "
+                         "file (point at $GITHUB_STEP_SUMMARY in CI)")
+    args = ap.parse_args(argv)
+
+    new, new_path = find_bench(args.new_dir)
+    if new is None:
+        print(f"[diff-serve] no valid BENCH_serve.json under "
+              f"{args.new_dir}: nothing to gate")
+        return 1
+    prev, prev_path = find_bench(args.prev_dir)
+    if prev is None:
+        print(f"[diff-serve] no previous BENCH_serve.json under "
+              f"{args.prev_dir} (first nightly?) — skipping the gate")
+        if args.md_out:
+            with open(args.md_out, "a") as f:
+                f.write("## Nightly BENCH_serve.json diff\n\n"
+                        "No previous BENCH_serve.json to compare against "
+                        "— regression gate skipped.\n")
+        return 0
+    print(f"[diff-serve] comparing {new_path} against {prev_path}")
+
+    rows = compare(new, prev, args.tol, args.slack_s)
+    regressions = []
+    for r in rows:
+        if r["status"] == "regression":
+            extra = (f" missed={r['missed']}" if "missed" in r else "")
+            print(f"[diff-serve] {r['scenario']} {r['metric']}: "
+                  f"{r['prev']} -> {r['new']} (limit {r['limit']})"
+                  f"{extra}  <-- REGRESSION")
+            regressions.append(f"{r['scenario']}:{r['metric']}")
+        elif r["status"] in ("new", "vanished"):
+            print(f"[diff-serve] scenario {r['scenario']}: {r['status']}")
+
+    if args.md_out:
+        with open(args.md_out, "a") as f:
+            f.write(render_markdown(rows, args.tol))
+
+    compared = sum(r["status"] in ("ok", "regression") for r in rows)
+    if regressions:
+        print(f"[diff-serve] {len(regressions)} regression(s) over "
+              f"{compared} compared metric(s): {regressions}")
+        return 1
+    print(f"[diff-serve] ok: {compared} metric(s) within +{args.tol:.0%} "
+          "of the previous nightly")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

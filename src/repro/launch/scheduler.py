@@ -41,7 +41,7 @@ from repro.configs.base import ArchConfig
 from repro.dist import sharding as sh
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
-from repro.models import transformer
+from repro.models import kvcache, transformer
 from repro.obs import jaxhooks as obs_jaxhooks
 from repro.obs import metrics as obs_metrics
 from repro.obs import registry as obs_registry
@@ -119,6 +119,22 @@ class Engine:
         length-aware prefill masks the tail. Padded prefill is only sound
         for full-width attention caches (DESIGN §6), so "pow2" asserts
         eligibility at construction.
+    paged: block-granular KV (DESIGN §13): full-width attn/MLA caches
+        become shared block pools; blocks are allocated on admission (a
+        request only reserves ceil(need/block_size) blocks, not a
+        worst-case max_len row) and freed on drain. Insufficient blocks
+        leave the queue head waiting — backpressure, never a drop.
+        SSM/recurrent/windowed leaves stay contiguous (O(1)/O(window) per
+        slot already), so `paged=True` is a no-op for those families
+        beyond the admission bookkeeping.
+    block_size/num_blocks: [paged] block granularity (max_len must divide
+        evenly) and pool size. num_blocks defaults to the contiguous
+        worst case + the null block, i.e. paged-by-layout but not yet
+        memory-constrained; smaller pools trade admission latency for
+        memory.
+    prefill_batch: [paged] up to this many same-bucket queued requests
+        are prefilled in ONE launch (batched multi-slot admission —
+        amortises short prompts). Partial groups pad with dummy rows.
     greedy/rng/temperature: token selection, mirroring `serve()`. Sampled
         decode draws from a per-request key (fold_in by rid) so outputs do
         not depend on which slot or step a request lands in.
@@ -127,7 +143,9 @@ class Engine:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
                  max_len: int = 128, mesh=None, greedy: bool = True,
                  rng=None, temperature: float = 1.0,
-                 bucket: Optional[str] = None, clock: Callable = None):
+                 bucket: Optional[str] = None, clock: Callable = None,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None, prefill_batch: int = 1):
         if bucket not in (None, "pow2"):
             raise ValueError(f"unknown bucket policy {bucket!r}")
         if bucket == "pow2" and not self._bucket_eligible(cfg):
@@ -147,6 +165,40 @@ class Engine:
         self.clock = clock or time.perf_counter
         self._base_key = rng if rng is not None else jax.random.PRNGKey(0)
 
+        self.paged = bool(paged)
+        if prefill_batch < 1:
+            raise ValueError(f"need prefill_batch >= 1, got {prefill_batch}")
+        if prefill_batch > 1 and not self.paged:
+            raise ValueError(
+                "prefill_batch > 1 (batched multi-slot admission) requires "
+                "paged=True — the contiguous engine admits one slot per "
+                "launch")
+        self.prefill_batch = min(int(prefill_batch), slots)
+        if self.paged:
+            if block_size < 1:
+                raise ValueError(f"need block_size >= 1, got {block_size}")
+            if max_len % block_size:
+                raise ValueError(
+                    f"max_len {max_len} must be a multiple of block_size "
+                    f"{block_size} so a slot's logical view tiles exactly")
+            self.block_size: Optional[int] = int(block_size)
+            self.blocks_per_slot = max_len // block_size
+            if num_blocks is None:
+                num_blocks = slots * self.blocks_per_slot + 1
+            if num_blocks < self.blocks_per_slot + 1:
+                raise ValueError(
+                    f"num_blocks {num_blocks} cannot hold one worst-case "
+                    f"request ({self.blocks_per_slot} blocks + the null "
+                    "block) — an empty engine would deadlock")
+            self.num_blocks: Optional[int] = int(num_blocks)
+            self.allocator = kvcache.BlockAllocator(self.num_blocks)
+            self.block_tables = np.zeros((slots, self.blocks_per_slot),
+                                         np.int32)
+            self._slot_blocks: list = [[] for _ in range(slots)]
+        else:
+            self.block_size = self.num_blocks = None
+            self.allocator = None
+
         # trace-time side effects: these counters move only when jax traces
         # (== compiles) a new program, so tests can assert the warm engine
         # never recompiles. Mirrored into the global obs recorder as
@@ -155,21 +207,34 @@ class Engine:
         self.lat_hist = obs_metrics.Histogram()
         self.queue_hist = obs_metrics.Histogram()
 
-        prefill = steps.make_slot_prefill_step(cfg, max_len=max_len)
-        decode = steps.make_masked_decode_step(cfg)
+        if self.paged:
+            prefill = steps.make_paged_prefill_step(
+                cfg, max_len=max_len, admit=self.prefill_batch)
+            decode = steps.make_paged_decode_step(cfg)
+            prefill_donate, decode_donate = (5,), (2,)
+        else:
+            prefill = steps.make_slot_prefill_step(cfg, max_len=max_len)
+            decode = steps.make_masked_decode_step(cfg)
+            prefill_donate, decode_donate = (4,), (2,)
 
         self._prefill = jax.jit(
             obs_jaxhooks.counted(
                 prefill, self.trace_counts,
                 lambda params, batch, *a: f"prefill_{batch['tokens'].shape[1]}",
                 agg_key="prefill"),
-            donate_argnums=(4,))
+            donate_argnums=prefill_donate)
         self._decode = jax.jit(
             obs_jaxhooks.counted(decode, self.trace_counts, "decode"),
-            donate_argnums=(2,))
+            donate_argnums=decode_donate)
 
         with sh.use_mesh(self.mesh, self.rules):
-            self.state = steps.serve_state_zeros(cfg, params, slots, max_len)
+            if self.paged:
+                self.state = steps.paged_serve_state_zeros(
+                    cfg, params, slots, max_len,
+                    block_size=self.block_size, num_blocks=self.num_blocks)
+            else:
+                self.state = steps.serve_state_zeros(cfg, params, slots,
+                                                     max_len)
         self.slots = [_Slot() for _ in range(slots)]
         self.queue: collections.deque = collections.deque()
         self._next_tok = np.zeros((slots,), np.int32)
@@ -199,14 +264,27 @@ class Engine:
                       np.asarray(patches))
         if req.prompt_len < 1 or req.max_new < 1:
             raise ValueError("need prompt_len >= 1 and max_new >= 1")
-        plen = self._padded_len(req.prompt_len)
         # patch tokens prepend to the decoder sequence and occupy cache
         # rows ahead of the prompt, so they count against the ring buffer.
-        need = (self.cfg.patch_tokens or 0) + plen + req.max_new
+        # Bucket-aware: the decode budget is the REAL prompt length (the
+        # padded tail sits above the kv_len mask and is overwritten by
+        # decode writes), so a bucketed request is rejected only when the
+        # true rows don't fit — or when the padded prefill itself exceeds
+        # the cache width.
+        patch = self.cfg.patch_tokens or 0
+        need = patch + req.prompt_len + req.max_new
         if need > self.max_len:
             raise ValueError(
                 f"request needs {need} cache rows (patches + prompt + "
                 f"max_new), engine max_len is {self.max_len}")
+        padded = patch + self._padded_len(req.prompt_len)
+        if padded > self.max_len:
+            raise ValueError(
+                f"prompt pads to the {self._padded_len(req.prompt_len)} "
+                f"bucket ({padded} cache rows with patches), which exceeds "
+                f"engine max_len {self.max_len} even though the request "
+                f"itself fits ({need} rows) — raise max_len or drop "
+                "bucketing")
         req.rid = self._next_rid
         self._next_rid += 1
         self.results[req.rid] = RequestResult(
@@ -228,12 +306,26 @@ class Engine:
             sub, logits_last / self.temperature))
 
     def _admit(self):
-        """Reclaim DRAIN slots, then pop the queue into FREE rows: batch-1
-        prefill-into-slot + first token from the prefill logits."""
-        for sl in self.slots:
+        """Reclaim DRAIN slots (freeing their blocks when paged), then pop
+        the queue into FREE rows."""
+        for i, sl in enumerate(self.slots):
             if sl.state is SlotState.DRAIN:
                 sl.state = SlotState.FREE
                 sl.request = sl.result = None
+                if self.paged and self._slot_blocks[i]:
+                    self.allocator.free(self._slot_blocks[i])
+                    self._slot_blocks[i] = []
+                    # all-null row: the slot's masked decode writes sink
+                    # into block 0 until the next admission re-tables it
+                    self.block_tables[i, :] = 0
+        if self.paged:
+            self._admit_paged()
+        else:
+            self._admit_contiguous()
+
+    def _admit_contiguous(self):
+        """Batch-1 prefill-into-slot + first token from the prefill
+        logits, one launch per admitted request."""
         rec = obs_registry.get_recorder()
         for i, sl in enumerate(self.slots):
             if not self.queue or sl.state is not SlotState.FREE:
@@ -270,6 +362,105 @@ class Engine:
             if sl.state is SlotState.PREFILL:
                 sl.state = SlotState.DECODE
 
+    def _blocks_needed(self, req: Request) -> int:
+        need = (self.cfg.patch_tokens or 0) + req.prompt_len + req.max_new
+        return -(-need // self.block_size)      # ceil
+
+    def _admit_paged(self):
+        """Paged admission: group up to `prefill_batch` same-bucket queue
+        heads (FIFO — a different-bucket head ends the group), allocate
+        each request's blocks, and prefill the group in one launch. An
+        unsatisfiable allocation leaves the head queued until a drain
+        frees blocks; construction guarantees an empty engine can always
+        hold one worst-case request, so `drain()` terminates."""
+        rec = obs_registry.get_recorder()
+        while self.queue:
+            free_slots = [i for i, sl in enumerate(self.slots)
+                          if sl.state is SlotState.FREE]
+            if not free_slots:
+                break
+            bucket = self._padded_len(self.queue[0].prompt_len)
+            group = []                       # (req, slot, blocks)
+            while (self.queue and free_slots
+                   and len(group) < self.prefill_batch):
+                req = self.queue[0]
+                if self._padded_len(req.prompt_len) != bucket:
+                    break
+                blocks = self.allocator.alloc(self._blocks_needed(req))
+                if blocks is None:
+                    break                    # backpressure: head waits
+                self.queue.popleft()
+                group.append((req, free_slots.pop(0), blocks))
+            if not group:
+                break
+            self._launch_paged_prefill(group, bucket)
+            rec.gauge("serve.engine.blocks_in_use").set(self.allocator.used)
+
+    def _launch_paged_prefill(self, group, bucket: int):
+        """One batched multi-slot prefill launch. Dummy pad rows come
+        FIRST and alias the first real request's slot with an all-null
+        table row: their contiguous-state write is fully overwritten by
+        the later real write (write order j=0..A-1), and their cache rows
+        sink into the null block."""
+        rec = obs_registry.get_recorder()
+        a = self.prefill_batch
+        pad = a - len(group)
+        toks = np.zeros((a, bucket), np.int32)
+        lengths = np.ones((a,), np.int32)
+        slots_arr = np.full((a,), group[0][1], np.int32)
+        tables = np.zeros((a, self.blocks_per_slot), np.int32)
+        frames = patches = None
+        if self.cfg.encoder_layers:
+            frames = np.zeros((a, self.cfg.encoder_frames,
+                               self.cfg.d_model), np.float32)
+        if self.cfg.patch_tokens:
+            patches = np.zeros((a, self.cfg.patch_tokens,
+                                self.cfg.d_model), np.float32)
+        for j, (req, slot_i, blocks) in enumerate(group):
+            r = pad + j
+            res = self.results[req.rid]
+            sl = self.slots[slot_i]
+            sl.state = SlotState.PREFILL
+            sl.request = req
+            sl.result = res
+            sl.key = jax.random.fold_in(self._base_key, req.rid)
+            res.t_admit = self.clock()
+            self.queue_hist.observe(res.queue_wait)
+            rec.histogram("serve.engine.queue_wait_s").observe(
+                res.queue_wait)
+            toks[r, :req.prompt_len] = req.tokens
+            lengths[r] = req.prompt_len
+            slots_arr[r] = slot_i
+            self._slot_blocks[slot_i] = blocks
+            self.block_tables[slot_i, :] = 0
+            self.block_tables[slot_i, :len(blocks)] = blocks
+            tables[r] = self.block_tables[slot_i]
+            if req.frames is not None:
+                frames[r] = req.frames
+            if req.patches is not None:
+                patches[r] = req.patches
+        batch = {"tokens": jnp.asarray(toks)}
+        if frames is not None:
+            batch["frames"] = jnp.asarray(frames)
+        if patches is not None:
+            batch["patches"] = jnp.asarray(patches)
+        with rec.span("engine.prefill", rids=[r.rid for r, _, _ in group],
+                      slots=[s for _, s, _ in group], plen=bucket,
+                      admitted=len(group)):
+            with sh.use_mesh(self.mesh, self.rules):
+                logits, self.state = self._prefill(
+                    self.params, batch, jnp.asarray(lengths),
+                    jnp.asarray(slots_arr), jnp.asarray(tables), self.state)
+            for j, (req, slot_i, _) in enumerate(group):
+                sl = self.slots[slot_i]
+                tok = self._select(logits[pad + j, -1], sl)
+                sl.result.tokens.append(tok)
+                sl.result.t_first = self.clock()
+                self._next_tok[slot_i] = tok
+                self._finish_if_done(slot_i, sl)
+                if sl.state is SlotState.PREFILL:
+                    sl.state = SlotState.DECODE
+
     def _finish_if_done(self, i: int, sl: _Slot):
         if len(sl.result.tokens) >= sl.request.max_new:
             sl.result.t_done = self.clock()
@@ -290,9 +481,18 @@ class Engine:
         rec = obs_registry.get_recorder()
         with rec.span("engine.decode", active=int(active.sum())):
             with sh.use_mesh(self.mesh, self.rules):
-                logits, self.state = self._decode(
-                    self.params, jnp.asarray(self._next_tok[:, None]),
-                    self.state, jnp.asarray(active))
+                if self.paged:
+                    # block tables ride along as a fresh host->device arg
+                    # every step: fixed (slots, blocks_per_slot) shape, so
+                    # table churn never retraces the decode program.
+                    logits, self.state = self._decode(
+                        self.params, jnp.asarray(self._next_tok[:, None]),
+                        self.state, jnp.asarray(active),
+                        jnp.asarray(self.block_tables))
+                else:
+                    logits, self.state = self._decode(
+                        self.params, jnp.asarray(self._next_tok[:, None]),
+                        self.state, jnp.asarray(active))
         self.step_count += 1
         emitted = 0
         last = logits[:, -1]
@@ -355,6 +555,13 @@ class Engine:
         over *admitted* requests (it is observed at admission time)."""
         done = [r for r in self.results.values() if r.t_done is not None]
         h = self.lat_hist
+        paged_keys = {
+            "paged": self.paged,
+            "block_size": self.block_size,
+            "num_blocks": self.num_blocks,
+            "blocks_in_use": self.allocator.used if self.paged else None,
+            "peak_blocks": self.allocator.peak if self.paged else None,
+        }
         if not done:
             return {
                 "requests": 0, "tokens": 0, "tok_per_s": 0.0,
@@ -363,6 +570,7 @@ class Engine:
                 "queue_wait_mean_s": None,
                 "decode_steps": self.step_count,
                 "peak_active": self.peak_active,
+                **paged_keys,
             }
         toks = sum(len(r.tokens) for r in done)
         span = max(r.t_done for r in done) - min(r.t_submit for r in done)
@@ -377,6 +585,7 @@ class Engine:
             "queue_wait_mean_s": self.queue_hist.mean,
             "decode_steps": self.step_count,
             "peak_active": self.peak_active,
+            **paged_keys,
         }
 
 

@@ -69,13 +69,19 @@ def serve(cfg, params, prompts, *, max_len: int, gen: int,
 def serve_stream(cfg, params, requests, *, slots: int, max_len: int,
                  mesh=None, greedy: bool = True, rng=None,
                  temperature: float = 1.0, realtime: bool = True,
-                 verbose: bool = True):
+                 verbose: bool = True, paged: bool = False,
+                 block_size: int = 16, num_blocks=None,
+                 prefill_batch: int = 1, bucket=None, clock=None):
     """Drain a request stream through the continuous-batching engine;
     returns (results, engine). `requests` is an iterable of
-    `scheduler.Request` (see `scheduler.synth_request_stream`)."""
+    `scheduler.Request` (see `scheduler.synth_request_stream`). With
+    `paged=True` the engine serves from block-granular KV pools
+    (DESIGN §13); block_size/num_blocks/prefill_batch pass through."""
     from repro.launch.scheduler import Engine
     eng = Engine(cfg, params, slots=slots, max_len=max_len, mesh=mesh,
-                 greedy=greedy, rng=rng, temperature=temperature)
+                 greedy=greedy, rng=rng, temperature=temperature,
+                 paged=paged, block_size=block_size, num_blocks=num_blocks,
+                 prefill_batch=prefill_batch, bucket=bucket, clock=clock)
     results = eng.run(requests, realtime=realtime)
     if verbose:
         st = eng.stats()
@@ -86,6 +92,11 @@ def serve_stream(cfg, params, requests, *, slots: int, max_len: int,
               f"{st['tokens']} tokens in {st['decode_steps']} decode steps "
               f"({st['tok_per_s']:.1f} tok/s, peak {st['peak_active']}/"
               f"{slots} slots)")
+        if st["paged"]:
+            print(f"[serve] paged: peak {st['peak_blocks']}/"
+                  f"{st['num_blocks']} blocks of {st['block_size']} "
+                  f"(contiguous worst case would pin "
+                  f"{slots * (max_len // st['block_size'])})")
         print(f"[serve] latency mean/p50/p99/max = "
               f"{_fmt_s(st['latency_mean_s'])}/"
               f"{_fmt_s(st['latency_p50_s'])}/"
@@ -113,6 +124,19 @@ def main(argv=None) -> int:
                     help="[--stream] Poisson arrival rate, req/s")
     ap.add_argument("--slots", type=int, default=None,
                     help="[--stream] cache slots (default: --batch)")
+    ap.add_argument("--paged", action="store_true",
+                    help="[--stream] block-granular paged KV: requests "
+                         "reserve ceil(need/block-size) blocks instead of "
+                         "a worst-case max_len row (DESIGN §13)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="[--paged] tokens per KV block (max_len must "
+                         "divide evenly)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="[--paged] pool size; default = contiguous worst "
+                         "case + null block")
+    ap.add_argument("--prefill-batch", type=int, default=1,
+                    help="[--paged] admit up to this many same-bucket "
+                         "requests in one batched prefill launch")
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="wrap the run in a jax.profiler trace written to "
                          "DIR (TensorBoard/Perfetto viewable; DESIGN §12)")
@@ -138,8 +162,13 @@ def main(argv=None) -> int:
                 cfg, args.requests, rate=args.rate, seed=args.seed,
                 prompt_lens=(max(1, args.prompt_len // 2), args.prompt_len),
                 gen_lens=(max(1, args.gen // 2), args.gen))
+            if args.paged and max_len % args.block_size:
+                max_len += args.block_size - max_len % args.block_size
             serve_stream(cfg, params, reqs, slots=args.slots or args.batch,
-                         max_len=max_len)
+                         max_len=max_len, paged=args.paged,
+                         block_size=args.block_size,
+                         num_blocks=args.num_blocks,
+                         prefill_batch=args.prefill_batch)
             return 0
 
         prompts = jax.random.randint(

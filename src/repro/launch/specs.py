@@ -64,44 +64,73 @@ def input_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh, rules) -> dict:
             for k, v in specs.items()}
 
 
-def engine_input_specs(cfg: ArchConfig, prompt_len: int,
-                       slots: int) -> dict:
+def engine_input_specs(cfg: ArchConfig, prompt_len: int, slots: int, *,
+                       paged: bool = False, block_size: int = 16,
+                       prefill_batch: int = 1,
+                       max_len: Optional[int] = None) -> dict:
     """Stand-ins for the continuous-batching engine's per-step data
     arguments (DESIGN §6): the batch-1 slot-prefill request plus the
     batch-wide masked-decode feed. Everything here is fixed-shape for a
     given (prompt bucket, slots), which is the engine's no-recompilation
-    invariant."""
+    invariant.
+
+    paged (DESIGN §13): the prefill request grows to the batched
+    multi-slot admission shapes (prefill_batch rows, vector lengths/slots,
+    per-row block-table rows) and the decode feed gains the (slots,
+    max_blocks) block tables — still all fixed-shape for a given
+    (bucket, slots, block geometry)."""
     i32 = jnp.int32
-    specs = {
-        # slot prefill: one request, right-padded to its bucket
-        "tokens": jax.ShapeDtypeStruct((1, prompt_len), i32),
-        "length": jax.ShapeDtypeStruct((), i32),
-        "slot": jax.ShapeDtypeStruct((), i32),
-        # masked decode over every slot
-        "token": jax.ShapeDtypeStruct((slots, 1), i32),
-        "active": jax.ShapeDtypeStruct((slots,), jnp.bool_),
-    }
+    if paged:
+        ml = max_len if max_len is not None else prompt_len
+        mb = -(-ml // block_size)
+        a = prefill_batch
+        specs = {
+            # batched multi-slot prefill: up to `a` same-bucket requests
+            "tokens": jax.ShapeDtypeStruct((a, prompt_len), i32),
+            "lengths": jax.ShapeDtypeStruct((a,), i32),
+            "slots": jax.ShapeDtypeStruct((a,), i32),
+            "table_rows": jax.ShapeDtypeStruct((a, mb), i32),
+            # masked decode over every slot, tables riding along
+            "token": jax.ShapeDtypeStruct((slots, 1), i32),
+            "active": jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            "block_tables": jax.ShapeDtypeStruct((slots, mb), i32),
+        }
+    else:
+        a = 1
+        specs = {
+            # slot prefill: one request, right-padded to its bucket
+            "tokens": jax.ShapeDtypeStruct((1, prompt_len), i32),
+            "length": jax.ShapeDtypeStruct((), i32),
+            "slot": jax.ShapeDtypeStruct((), i32),
+            # masked decode over every slot
+            "token": jax.ShapeDtypeStruct((slots, 1), i32),
+            "active": jax.ShapeDtypeStruct((slots,), jnp.bool_),
+        }
     if cfg.encoder_layers:
         specs["frames"] = jax.ShapeDtypeStruct(
-            (1, cfg.encoder_frames, cfg.d_model), jnp.float32)
+            (a, cfg.encoder_frames, cfg.d_model), jnp.float32)
     if cfg.patch_tokens:
         specs["patches"] = jax.ShapeDtypeStruct(
-            (1, cfg.patch_tokens, cfg.d_model), jnp.float32)
+            (a, cfg.patch_tokens, cfg.d_model), jnp.float32)
     return specs
 
 
 # logical axes of the engine's data arguments — single source of truth
-# for engine_input_shardings and the scheduler tests.
+# for engine_input_shardings and the scheduler tests. Block tables and
+# lengths replicate beyond the batch axis: they are tiny int32 host
+# tables, not sharded tensors.
 ENGINE_INPUT_LOGICAL = {
     "tokens": ("batch", "seq"), "length": (), "slot": (),
     "token": ("batch", None), "active": ("batch",),
     "frames": ("batch", None, None), "patches": ("batch", None, None),
+    "lengths": ("batch",), "slots": ("batch",),
+    "table_rows": ("batch", None), "block_tables": ("batch", None),
 }
 
 
 def engine_input_shardings(cfg: ArchConfig, prompt_len: int, slots: int,
-                           mesh, rules) -> dict:
-    specs = engine_input_specs(cfg, prompt_len, slots)
+                           mesh, rules, **paged_kw) -> dict:
+    specs = engine_input_specs(cfg, prompt_len, slots, **paged_kw)
     return {k: sh.named_sharding(mesh, rules, ENGINE_INPUT_LOGICAL[k],
                                  shape=v.shape)
             for k, v in specs.items()}

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import logical_constraint
-from repro.models import transformer
+from repro.models import kvcache, transformer
 from repro.train import optimizer as opt_lib
 
 AUX_COEF = 0.01
@@ -246,10 +246,131 @@ def make_masked_decode_step(cfg: ArchConfig, *, compute_dtype=None) -> Callable:
     def masked_decode_step(params, token, state, active):
         if compute_dtype is not None:
             params = cast_tree(params, compute_dtype)
-        logits, new = transformer.forward_decode(cfg, params, token, state)
+        # active also rides into the forward as the MoE token mask:
+        # expert capacity is shared across the batch, so a dead slot's
+        # garbage token could otherwise evict a live token from an
+        # expert queue — live rows must be a function of live rows only.
+        logits, new = transformer.forward_decode(cfg, params, token, state,
+                                                 token_mask=active)
         pos = jnp.where(active, new.pos, state.pos)
         return logits, new._replace(pos=pos)
     return masked_decode_step
+
+
+# ---------------------------------------------------------------------------
+# Paged serving steps (DESIGN §13)
+# ---------------------------------------------------------------------------
+
+# tree.map stops at these NamedTuples so paged pools (no batch axis) can be
+# routed to scatters while everything else takes the per-slot splice.
+_CACHE_LEAF_TYPES = (kvcache.AttnCache, kvcache.MLACache,
+                     kvcache.PagedAttnCache, kvcache.PagedMLACache)
+
+
+def write_paged_state_slot(full, one, slot, table_row):
+    """`write_state_slot` for a paged engine: paged pool leaves scatter the
+    batch-1 contiguous cache into the blocks of `table_row` ((MB,) int32);
+    contiguous leaves (SSM/recurrent/windowed state, cross kv, pos) splice
+    into row `slot` exactly as before. Fixed-shape either way."""
+    def is_cache(x):
+        return isinstance(x, _CACHE_LEAF_TYPES)
+
+    def upd(f, o):
+        if isinstance(f, kvcache.PagedAttnCache):
+            return kvcache.paged_scatter_attn(f, o, table_row)
+        if isinstance(f, kvcache.PagedMLACache):
+            return kvcache.paged_scatter_mla(f, o, table_row)
+        return write_state_slot(f, o, slot)
+
+    return jax.tree.map(upd, full, one, is_leaf=is_cache)
+
+
+def _state_row(cfg: ArchConfig, state, j: int):
+    """Static batch-row j of a batch-A prefill state, keepdims — the
+    batch axis sits behind the layer axis on scan-stacked segments."""
+    segs = transformer.arch_segments(cfg)
+
+    def take(tree, axis):
+        return jax.tree.map(
+            lambda l: jax.lax.slice_in_dim(l, j, j + 1, axis=axis), tree)
+
+    caches = [take(c, 1 if seg.repeat > 1 else 0)
+              for seg, c in zip(segs, state.caches)]
+    cross = [None if x is None else take(x, 1 if seg.repeat > 1 else 0)
+             for seg, x in zip(segs, state.cross)]
+    pos = jax.lax.slice_in_dim(state.pos, j, j + 1, axis=0)
+    return transformer.ServeState(caches=caches, cross=cross, pos=pos)
+
+
+def make_paged_prefill_step(cfg: ArchConfig, *, max_len: int, admit: int,
+                            compute_dtype=None) -> Callable:
+    """(params, batch, lengths, slots, tables, state) -> (logits, state').
+
+    Batched multi-slot prefill admission: `batch["tokens"]` is (admit, S)
+    — up to `admit` same-bucket requests prefilled in ONE launch (short
+    prompts amortised, DESIGN §13). lengths/slots are (admit,) int32,
+    tables (admit, max_blocks). Partial groups pad with dummy rows that
+    the engine orders FIRST and points at the first real request's slot
+    (fully overwritten by the later real write) with an all-null table
+    row, so dummies never touch live state. Paged cache leaves scatter
+    into each row's blocks; contiguous leaves splice per slot."""
+    def paged_prefill_step(params, batch, lengths, slots, tables, state):
+        if compute_dtype is not None:
+            params = cast_tree(params, compute_dtype)
+        logits, one = transformer.forward_prefill(
+            cfg, params, batch["tokens"], max_len=max_len,
+            frames=batch.get("frames"), patches=batch.get("patches"),
+            length=lengths)
+        for j in range(admit):
+            state = write_paged_state_slot(
+                state, _state_row(cfg, one, j), slots[j], tables[j])
+        return logits, state
+    return paged_prefill_step
+
+
+def make_paged_decode_step(cfg: ArchConfig, *, compute_dtype=None) -> Callable:
+    """(params, token, state, active, block_tables) -> (logits, state').
+
+    `make_masked_decode_step` plus the per-slot block tables (B, MB). An
+    inactive slot's table row is all-null, so its (pos-frozen) write lands
+    in the garbage-sink block 0 instead of a recycled live block."""
+    def paged_decode_step(params, token, state, active, block_tables):
+        if compute_dtype is not None:
+            params = cast_tree(params, compute_dtype)
+        logits, new = transformer.forward_decode(
+            cfg, params, token, state, block_tables=block_tables,
+            token_mask=active)
+        pos = jnp.where(active, new.pos, state.pos)
+        return logits, new._replace(pos=pos)
+    return paged_decode_step
+
+
+def paged_serve_state_zeros(cfg: ArchConfig, params, slots: int,
+                            max_len: int, *, block_size: int,
+                            num_blocks: int):
+    """`serve_state_zeros` with full-width attn/MLA cache leaves replaced
+    by shared block pools (no batch axis). SSM/recurrent/windowed-local
+    leaves stay contiguous per slot: their state is O(1) (or O(window))
+    per sequence already, so paging buys nothing (DESIGN §13)."""
+    state = serve_state_zeros(cfg, params, slots, max_len)
+    new_caches = []
+    for seg, seg_cache in zip(transformer.arch_segments(cfg), state.caches):
+        out = {}
+        for name, c in seg_cache.items():
+            ls = seg.layers[int(name[1:])]
+            stack = seg.repeat if seg.repeat > 1 else None
+            if ls.mixer == "attn":      # full-width GQA (sliding -> local)
+                out[name] = kvcache.init_paged_attn_cache(
+                    cfg.num_kv_heads, num_blocks, block_size,
+                    cfg.resolved_head_dim, cfg.kv_cache_dtype, stack=stack)
+            elif ls.mixer == "mla":
+                out[name] = kvcache.init_paged_mla_cache(
+                    num_blocks, block_size, cfg.kv_lora_rank,
+                    cfg.qk_rope_dim, stack=stack)
+            else:
+                out[name] = c
+        new_caches.append(out)
+    return state._replace(caches=new_caches)
 
 
 def serve_state_zeros(cfg: ArchConfig, params, slots: int, max_len: int):

@@ -1,13 +1,26 @@
-"""KV caches for serving: full, ring-buffer (sliding window), int8, MLA.
+"""KV caches for serving: full, ring-buffer (sliding window), int8, MLA —
+plus the block-granular *paged* variants (DESIGN §13).
 
 Caches are NamedTuples of stacked-per-layer arrays so the decode step can
 lax.scan over layers. Quantised caches store int8 payloads with per-token
 f32 scales (fit-driven: the MHA arch qwen1.5-32b needs int8 at 32k x 128
 to fit 16 GiB/chip — EXPERIMENTS §Dry-run).
+
+Paged layout: instead of one worst-case `max_len` row per batch slot, the
+paged caches hold a shared pool of fixed-size blocks with NO batch axis —
+`PagedAttnCache.k` is `(Hkv, num_blocks, block_size, hd)` — and each slot
+maps logical block i -> physical block via a host-side block table
+(`BlockAllocator`). Block 0 is reserved as the *null* block: freed slots'
+table rows reset to it, so an inactive slot's masked decode write lands in
+a garbage sink instead of a recycled live block, and unallocated logical
+blocks read from it (masked by kv_len before softmax, so never visible).
+Only caches whose width scales with max_len page: GQA (`attn`) and MLA.
+SSM/recurrent states are inherently O(1) per slot and windowed (`local`)
+caches are already bounded at the window, so they stay contiguous.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -133,3 +146,232 @@ def init_mla_cache(batch: int, window: int, lora_rank: int,
     # standard K cache.
     return MLACache(ckv=jnp.zeros((batch, window, lora_rank), jnp.float32),
                     krope=jnp.zeros((batch, window, rope_dim), jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-granular) caches — DESIGN §13
+# ---------------------------------------------------------------------------
+
+
+class PagedAttnCache(NamedTuple):
+    """Shared block pool for GQA KV: no batch axis; slots index via a
+    block table. k/v: (Hkv, num_blocks, block_size, hd) bf16/int8/int4."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray]    # (Hkv, NB, BS, 1) f32 if quantised
+    v_scale: Optional[jnp.ndarray]
+
+
+class PagedMLACache(NamedTuple):
+    """Shared block pool for the MLA latent cache.
+    ckv: (num_blocks, block_size, r) f32; krope: (NB, BS, rope_dim) bf16
+    — same dtypes (and the same f32-latent rationale) as MLACache."""
+    ckv: jnp.ndarray
+    krope: jnp.ndarray
+
+
+def init_paged_attn_cache(kv_heads: int, num_blocks: int, block_size: int,
+                          head_dim: int, dtype: str = "bf16",
+                          stack: Optional[int] = None) -> PagedAttnCache:
+    """Zero pool; `stack` prepends a layer axis for scan-stacked segments."""
+    def z(shape, dt):
+        if stack:
+            shape = (stack, *shape)
+        return jnp.zeros(shape, dt)
+
+    if dtype in ("int8", "int4"):
+        qdtype = jnp.int4 if dtype == "int4" else jnp.int8
+        return PagedAttnCache(
+            k=z((kv_heads, num_blocks, block_size, head_dim), qdtype),
+            v=z((kv_heads, num_blocks, block_size, head_dim), qdtype),
+            k_scale=z((kv_heads, num_blocks, block_size, 1), jnp.float32),
+            v_scale=z((kv_heads, num_blocks, block_size, 1), jnp.float32))
+    return PagedAttnCache(
+        k=z((kv_heads, num_blocks, block_size, head_dim), jnp.bfloat16),
+        v=z((kv_heads, num_blocks, block_size, head_dim), jnp.bfloat16),
+        k_scale=None, v_scale=None)
+
+
+def init_paged_mla_cache(num_blocks: int, block_size: int, lora_rank: int,
+                         rope_dim: int,
+                         stack: Optional[int] = None) -> PagedMLACache:
+    def z(shape, dt):
+        if stack:
+            shape = (stack, *shape)
+        return jnp.zeros(shape, dt)
+
+    return PagedMLACache(
+        ckv=z((num_blocks, block_size, lora_rank), jnp.float32),
+        krope=z((num_blocks, block_size, rope_dim), jnp.bfloat16))
+
+
+def paged_cache_write_at(cache: PagedAttnCache, k_new: jnp.ndarray,
+                         v_new: jnp.ndarray, block: jnp.ndarray,
+                         offset: jnp.ndarray) -> PagedAttnCache:
+    """Decode write: one entry per sequence at (block[b], offset[b]).
+
+    k_new/v_new: (B, Hkv, 1, hd); block/offset: (B,) int32. Inactive slots
+    carry an all-null block table, so their (masked, frozen-pos) write
+    collides harmlessly in block 0 instead of corrupting recycled blocks.
+    """
+    quant = cache.k_scale is not None
+    if quant:
+        kq, ks = _quantize(k_new, cache.k.dtype)
+        vq, vs = _quantize(v_new, cache.v.dtype)
+    else:
+        kq, vq = k_new.astype(cache.k.dtype), v_new.astype(cache.v.dtype)
+
+    def put(pool, val):
+        # pool (Hkv, NB, BS, X); val (B, Hkv, 1, X) -> (Hkv, B, X) scatter
+        return pool.at[:, block, offset].set(jnp.moveaxis(val[:, :, 0], 0, 1))
+
+    k, v = put(cache.k, kq), put(cache.v, vq)
+    if quant:
+        return PagedAttnCache(k, v, put(cache.k_scale, ks),
+                              put(cache.v_scale, vs))
+    return PagedAttnCache(k, v, None, None)
+
+
+def paged_gather(cache: PagedAttnCache, table: jnp.ndarray,
+                 dtype=jnp.bfloat16):
+    """Materialise each slot's logical view for the decode attention read.
+
+    table: (B, max_blocks) int32 -> k/v (B, Hkv, max_blocks*BS, hd).
+    Unallocated logical blocks read the null block — garbage that sits
+    above the kv_len mask in `decode_attention`, exactly like the dead
+    tail of a contiguous cache. Dequant order matches `cache_read` so the
+    paged and contiguous decode paths stay bit-identical.
+    """
+    def gather(pool):
+        x = pool[:, table]                    # (Hkv, B, MB, BS, X)
+        x = jnp.moveaxis(x, 1, 0)             # (B, Hkv, MB, BS, X)
+        b, h, mb, bs, d = x.shape
+        return x.reshape(b, h, mb * bs, d)
+
+    k, v = gather(cache.k), gather(cache.v)
+    if cache.k_scale is not None:
+        k = (k.astype(jnp.float32) * gather(cache.k_scale)).astype(dtype)
+        v = (v.astype(jnp.float32) * gather(cache.v_scale)).astype(dtype)
+        return k, v
+    return k.astype(dtype), v.astype(dtype)
+
+
+def mla_paged_cache_write_at(cache: PagedMLACache, ckv_new: jnp.ndarray,
+                             krope_new: jnp.ndarray, block: jnp.ndarray,
+                             offset: jnp.ndarray) -> PagedMLACache:
+    """ckv_new: (B, 1, r); krope_new: (B, 1, rope_dim); block/offset (B,)."""
+    return PagedMLACache(
+        ckv=cache.ckv.at[block, offset].set(
+            ckv_new[:, 0].astype(cache.ckv.dtype)),
+        krope=cache.krope.at[block, offset].set(
+            krope_new[:, 0].astype(cache.krope.dtype)))
+
+
+def mla_paged_gather(cache: PagedMLACache, table: jnp.ndarray):
+    """(B, MB) table -> (ckv (B, MB*BS, r) f32, krope (B, MB*BS, rd) f32),
+    mirroring the contiguous decode's astype(f32) reads."""
+    def gather(pool):
+        x = pool[table]                       # (B, MB, BS, X)
+        b, mb, bs, d = x.shape
+        return x.reshape(b, mb * bs, d).astype(jnp.float32)
+
+    return gather(cache.ckv), gather(cache.krope)
+
+
+def paged_scatter_attn(pool_cache: PagedAttnCache, one: AttnCache,
+                       table_row: jnp.ndarray) -> PagedAttnCache:
+    """Move a freshly prefilled batch-1 contiguous cache into the blocks
+    of `table_row` ((max_blocks,) int32). Fixed-shape: the whole
+    max_len-wide cache is scattered; rows beyond the slot's allocation map
+    to duplicate null entries in the table and collide in block 0."""
+    def put(pool, src):
+        if pool is None:
+            return None
+        src = jnp.squeeze(src, axis=-4)       # ([L,] Hkv, W, X)
+        bs = pool.shape[-2]
+        mb = table_row.shape[0]
+        src = src.reshape(*src.shape[:-2], mb, bs, src.shape[-1])
+        return pool.at[..., table_row, :, :].set(src.astype(pool.dtype))
+
+    return PagedAttnCache(put(pool_cache.k, one.k),
+                          put(pool_cache.v, one.v),
+                          put(pool_cache.k_scale, one.k_scale),
+                          put(pool_cache.v_scale, one.v_scale))
+
+
+def paged_scatter_mla(pool_cache: PagedMLACache, one: MLACache,
+                      table_row: jnp.ndarray) -> PagedMLACache:
+    def put(pool, src):
+        src = jnp.squeeze(src, axis=-3)       # ([L,] W, r)
+        bs = pool.shape[-2]
+        mb = table_row.shape[0]
+        src = src.reshape(*src.shape[:-2], mb, bs, src.shape[-1])
+        return pool.at[..., table_row, :, :].set(src.astype(pool.dtype))
+
+    return PagedMLACache(put(pool_cache.ckv, one.ckv),
+                         put(pool_cache.krope, one.krope))
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over the physical block pool.
+
+    Block 0 is the reserved null block and is never handed out; the free
+    list starts as [1 .. num_blocks-1]. Invariant (checked by `check()`
+    and the hypothesis stress battery): free + live partition the usable
+    blocks exactly — no leaks, no double assignment.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"need num_blocks >= 2 (1 usable + the null block), "
+                f"got {num_blocks}")
+        self.num_blocks = int(num_blocks)
+        # pop() serves ascending ids first — deterministic tables in tests
+        self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
+        self._live: set = set()
+        self.peak = 0
+
+    @property
+    def used(self) -> int:
+        return len(self._live)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n blocks, or None when the pool can't satisfy the request (the
+        engine leaves the request queued — backpressure, never a drop)."""
+        if n < 1:
+            raise ValueError(f"need n >= 1 blocks, got {n}")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._live.update(out)
+        self.peak = max(self.peak, len(self._live))
+        return out
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if b not in self._live:
+                raise ValueError(
+                    f"double free / foreign block {b} (live: "
+                    f"{len(self._live)})")
+            self._live.remove(b)
+            self._free.append(b)
+
+    def check(self) -> None:
+        """Reconcile: free ∪ live == {1..num_blocks-1}, disjoint, no dup."""
+        free = self._free
+        if len(set(free)) != len(free):
+            raise AssertionError(f"free list holds duplicates: {free}")
+        if set(free) & self._live:
+            raise AssertionError(
+                f"blocks both free and live: {set(free) & self._live}")
+        if 0 in self._live or 0 in free:
+            raise AssertionError("null block 0 entered circulation")
+        if len(free) + len(self._live) != self.num_blocks - 1:
+            raise AssertionError(
+                f"leak: {len(free)} free + {len(self._live)} live != "
+                f"{self.num_blocks - 1} usable")

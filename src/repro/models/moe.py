@@ -27,10 +27,15 @@ from repro.dist.sharding import logical_constraint
 GROUP = 512
 
 
-def _route(cfg, p, xg):
+def _route(cfg, p, xg, mask=None):
     """Shared routing: gates, expert ids, capacity slots, aux loss.
 
-    xg: (G, T, D) -> gate_vals/gate_idx/pos/keep (G, T, K), aux scalar."""
+    xg: (G, T, D) -> gate_vals/gate_idx/pos/keep (G, T, K), aux scalar.
+    mask: optional (G, T) bool; False tokens are excluded from dispatch
+    entirely — they claim no capacity slot and combine to zero. Serving
+    needs this: an idle decode slot's garbage token must never displace a
+    live token from an expert's queue (capacity is a shared resource
+    across the batch, so without the mask dead rows perturb live ones)."""
     e, k = cfg.num_experts, cfg.top_k
     t = xg.shape[1]
     logits = xg @ p["router"].astype(xg.dtype)              # (G, T, E)
@@ -48,11 +53,15 @@ def _route(cfg, p, xg):
     # order — cumsum per-choice-slot would let a 1st-choice and a 2nd-choice
     # token collide in the same capacity slot.
     onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (G, T, K, E)
+    if mask is not None:
+        onehot = onehot * mask[:, :, None, None].astype(onehot.dtype)
     oh_flat = onehot.reshape(-1, t * k, e)
     pos_flat = jnp.cumsum(oh_flat, axis=1) - oh_flat
     pos = pos_flat.reshape(-1, t, k, e)
     pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (G, T, K)
     keep = pos < cap
+    if mask is not None:
+        keep = jnp.logical_and(keep, mask[:, :, None])
     return gate_vals, gate_idx, pos, keep, cap, aux, onehot
 
 
@@ -76,11 +85,11 @@ def _experts(cfg, p, xin):
     return logical_constraint(out, (e_ax, "batch", None, None))
 
 
-def _moe_sorted(cfg, p, xg):
+def _moe_sorted(cfg, p, xg, mask=None):
     """Scatter/gather dispatch: O(T·k·D) data movement."""
     g, t, d = xg.shape
     e, k = cfg.num_experts, cfg.top_k
-    gate_vals, gate_idx, pos, keep, cap, aux, _ = _route(cfg, p, xg)
+    gate_vals, gate_idx, pos, keep, cap, aux, _ = _route(cfg, p, xg, mask)
 
     e_flat = gate_idx.reshape(g, t * k)
     p_flat = jnp.where(keep, pos, cap).reshape(g, t * k)  # cap = waste slot
@@ -104,10 +113,11 @@ def _moe_sorted(cfg, p, xg):
     return y, aux
 
 
-def _moe_einsum(cfg, p, xg):
+def _moe_einsum(cfg, p, xg, mask=None):
     """Reference one-hot dispatch: O(T·E·C) data movement."""
     g, t, d = xg.shape
-    gate_vals, gate_idx, pos, keep, cap, aux, onehot = _route(cfg, p, xg)
+    gate_vals, gate_idx, pos, keep, cap, aux, onehot = _route(cfg, p, xg,
+                                                              mask)
     pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
     dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, pos_oh)
     combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, pos_oh,
@@ -118,17 +128,23 @@ def _moe_einsum(cfg, p, xg):
     return y, aux
 
 
-def moe_block(cfg, p, x: jnp.ndarray):
-    """x: (B, S, D) -> (B, S, D), plus load-balance aux loss."""
+def moe_block(cfg, p, x: jnp.ndarray, token_mask=None):
+    """x: (B, S, D) -> (B, S, D), plus load-balance aux loss.
+
+    token_mask: optional (B, S) bool — False tokens neither claim expert
+    capacity nor produce output (see `_route`). None keeps the program
+    identical to before the mask existed (train/prefill paths)."""
     b, s, d = x.shape
     tokens = b * s
     g = max(1, tokens // GROUP)
     xg = x.reshape(g, tokens // g, d)
+    mg = (None if token_mask is None
+          else token_mask.reshape(g, tokens // g))
 
     if getattr(cfg, "moe_dispatch", "sorted") == "einsum":
-        y, aux = _moe_einsum(cfg, p, xg)
+        y, aux = _moe_einsum(cfg, p, xg, mg)
     else:
-        y, aux = _moe_sorted(cfg, p, xg)
+        y, aux = _moe_sorted(cfg, p, xg, mg)
 
     if cfg.num_shared_experts:
         hs = jax.nn.silu(xg @ p["shared_w1"]) * (xg @ p["shared_w3"])

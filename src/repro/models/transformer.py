@@ -286,8 +286,9 @@ def _qkv(cfg, p, x):
 
 def attn_mixer(cfg, p, x, positions, *, window: int, causal: bool = True,
                mode: str = "train", cache=None, pos=None,
-               cache_width: int = 0):
-    """GQA attention; ring-buffer cache when window > 0."""
+               cache_width: int = 0, block_table=None):
+    """GQA attention; ring-buffer cache when window > 0. Decode against a
+    `PagedAttnCache` additionally takes the slot block tables (B, MB)."""
     b, s, d = x.shape
     use_rope = cfg.rope_theta > 0
     q, k, v = _qkv(cfg, p, x)
@@ -326,13 +327,29 @@ def attn_mixer(cfg, p, x, positions, *, window: int, causal: bool = True,
             new_cache = kvcache.cache_write(
                 new_cache, k[:, :, s - keep:], v[:, :, s - keep:], slots)
     else:  # decode: x is (B, 1, D), pos (B,) — one position per sequence
-        w = cache.k.shape[2]
-        slot = (pos % w).astype(jnp.int32)
-        new_cache = kvcache.cache_write_at(cache, k, v, slot)
-        # bf16 cache read; scores accumulate f32 via preferred_element_type
-        # (§Perf it.4 — an f32 dequant copy of the cache doubled decode
-        # temp memory: qwen1.5 decode_32k 19.1 -> ~9 GiB/chip)
-        kf, vf = kvcache.cache_read(new_cache, dtype=jnp.bfloat16)
+        if isinstance(cache, kvcache.PagedAttnCache):
+            # paged: pos maps to (block_table[b, pos//BS], pos % BS); the
+            # gathered view is max_blocks*BS == max_len wide, so the same
+            # kv_len mask makes paged decode bit-identical to contiguous
+            # (garbage beyond the mask differs but is never visible).
+            bs = cache.k.shape[-2]
+            blk = jnp.take_along_axis(
+                block_table, (pos // bs)[:, None].astype(jnp.int32),
+                axis=1)[:, 0]
+            off = (pos % bs).astype(jnp.int32)
+            new_cache = kvcache.paged_cache_write_at(cache, k, v, blk, off)
+            kf, vf = kvcache.paged_gather(new_cache, block_table,
+                                          dtype=jnp.bfloat16)
+            w = block_table.shape[1] * bs
+        else:
+            w = cache.k.shape[2]
+            slot = (pos % w).astype(jnp.int32)
+            new_cache = kvcache.cache_write_at(cache, k, v, slot)
+            # bf16 cache read; scores accumulate f32 via
+            # preferred_element_type (§Perf it.4 — an f32 dequant copy of
+            # the cache doubled decode temp memory: qwen1.5 decode_32k
+            # 19.1 -> ~9 GiB/chip)
+            kf, vf = kvcache.cache_read(new_cache, dtype=jnp.bfloat16)
         kv_len = jnp.minimum(pos + 1, w).astype(jnp.int32)
         out = decode_attention(q, kf, vf, kv_len=kv_len,
                                window=0)  # ring buffer already bounds window
@@ -341,7 +358,7 @@ def attn_mixer(cfg, p, x, positions, *, window: int, causal: bool = True,
 
 
 def mla_mixer(cfg, p, x, positions, *, mode: str = "train", cache=None,
-              pos=None, cache_width: int = 0):
+              pos=None, cache_width: int = 0, block_table=None):
     """DeepSeek-V2 multi-head latent attention (decode uses the absorbed
     formulation over the compressed cache)."""
     b, s, d = x.shape
@@ -385,11 +402,23 @@ def mla_mixer(cfg, p, x, positions, *, mode: str = "train", cache=None,
                 krope=new_cache.krope.at[:, slots].set(
                     kr[:, s - keep:].astype(new_cache.krope.dtype)))
     else:  # decode, absorbed; pos (B,) — one position per sequence
-        w = cache.ckv.shape[1]
-        slot = (pos % w).astype(jnp.int32)
-        new_cache = kvcache.mla_cache_write_at(cache, ckv, kr, slot)
-        ckv_all = new_cache.ckv.astype(jnp.float32)       # (B, W, r)
-        kr_all = new_cache.krope.astype(jnp.float32)      # (B, W, rd)
+        if isinstance(cache, kvcache.PagedMLACache):
+            bs = cache.ckv.shape[-2]
+            blk = jnp.take_along_axis(
+                block_table, (pos // bs)[:, None].astype(jnp.int32),
+                axis=1)[:, 0]
+            off = (pos % bs).astype(jnp.int32)
+            new_cache = kvcache.mla_paged_cache_write_at(cache, ckv, kr,
+                                                         blk, off)
+            ckv_all, kr_all = kvcache.mla_paged_gather(new_cache,
+                                                       block_table)
+            w = block_table.shape[1] * bs
+        else:
+            w = cache.ckv.shape[1]
+            slot = (pos % w).astype(jnp.int32)
+            new_cache = kvcache.mla_cache_write_at(cache, ckv, kr, slot)
+            ckv_all = new_cache.ckv.astype(jnp.float32)   # (B, W, r)
+            kr_all = new_cache.krope.astype(jnp.float32)  # (B, W, rd)
         q_abs = jnp.einsum("bhn,rhn->bhr", qn[:, 0].astype(jnp.float32),
                            p["w_uk"].astype(jnp.float32))
         scores = (jnp.einsum("bhr,bwr->bhw", q_abs, ckv_all) +
@@ -438,7 +467,7 @@ def cross_mixer(cfg, p, x, enc_out=None, cross_kv=None):
 
 def _apply_layer(cfg, spec: LayerSpec, p, x, positions, *, mode,
                  cache=None, pos=None, cache_width=0, enc_out=None,
-                 cross_kv=None):
+                 cross_kv=None, block_table=None, token_mask=None):
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(cfg, p["ln1"], x)
     new_cache = None
@@ -451,11 +480,13 @@ def _apply_layer(cfg, spec: LayerSpec, p, x, positions, *, mode,
                                     window=window, causal=causal, mode=mode
                                     if mode != "encode" else "train",
                                     cache=cache, pos=pos,
-                                    cache_width=cache_width)
+                                    cache_width=cache_width,
+                                    block_table=block_table)
     elif spec.mixer == "mla":
         out, new_cache = mla_mixer(cfg, p["mixer"], h, positions, mode=mode,
                                    cache=cache, pos=pos,
-                                   cache_width=cache_width)
+                                   cache_width=cache_width,
+                                   block_table=block_table)
     elif spec.mixer == "ssd":
         if mode == "decode":
             out, new_cache = ssm.mamba2_decode(cfg, p["mixer"], h, cache)
@@ -486,7 +517,11 @@ def _apply_layer(cfg, spec: LayerSpec, p, x, positions, *, mode,
     if spec.ffn == "mlp":
         x = x + mlp(cfg, p["ffn"], apply_norm(cfg, p["ln2"], x))
     elif spec.ffn == "moe":
-        y, aux = moe.moe_block(cfg, p["ffn"], apply_norm(cfg, p["ln2"], x))
+        y, aux = moe.moe_block(
+            cfg, p["ffn"], apply_norm(cfg, p["ln2"], x),
+            token_mask=(None if token_mask is None
+                        else jnp.broadcast_to(token_mask[:, None],
+                                              x.shape[:2])))
         x = x + y
     return x, new_cache, new_cross, aux
 
@@ -618,8 +653,9 @@ def forward_prefill(cfg: ArchConfig, params, tokens, *, max_len: int,
                     frames=None, patches=None, length=None):
     """Process the prompt, build caches; returns last-position logits.
 
-    length: optional (traced) scalar — number of *real* prompt tokens when
-    `tokens` is right-padded to a fixed bucket. Logits come from position
+    length: optional (traced) scalar — or (B,) vector of per-sequence
+    lengths for the batched multi-slot prefill — number of *real* prompt
+    tokens when `tokens` is right-padded. Logits come from position
     length-1 and pos starts at length; KV written for positions >= length
     is garbage but sits above the decode validity mask (kv_len = pos+1)
     and is overwritten before it ever becomes visible (DESIGN §6). Only
@@ -659,16 +695,33 @@ def forward_prefill(cfg: ArchConfig, params, tokens, *, max_len: int,
     if length is None:
         last = x[:, -1:]
         next_pos = jnp.full((tokens.shape[0],), x.shape[1], jnp.int32)
-    else:
+    elif jnp.ndim(length) == 0:
         last = jax.lax.dynamic_slice_in_dim(x, off + length - 1, 1, axis=1)
         next_pos = jnp.full((tokens.shape[0],), off + length, jnp.int32)
+    else:
+        # vector length (B,): per-sequence real prompt lengths — the
+        # batched multi-slot prefill path (DESIGN §13). Each row's logits
+        # come from its own last real position.
+        idx = (off + length - 1).astype(jnp.int32)
+        last = x[jnp.arange(x.shape[0])[:, None], idx[:, None]]
+        next_pos = (off + length).astype(jnp.int32)
     logits = _logits(cfg, params, last)
     state = ServeState(caches=caches, cross=crosses, pos=next_pos)
     return logits, state
 
 
-def forward_decode(cfg: ArchConfig, params, token, state: ServeState):
+def forward_decode(cfg: ArchConfig, params, token, state: ServeState,
+                   *, block_tables=None, token_mask=None):
     """One decode step. token: (B, 1) -> logits (B, 1, V), new state.
+
+    block_tables: (B, max_blocks) int32 when the state holds paged
+    attn/MLA pools (DESIGN §13); shared across layers, so it rides as a
+    closure capture rather than scan carry. None for contiguous states.
+
+    token_mask: optional (B,) bool of live rows. MoE capacity is a shared
+    per-batch resource, so a dead slot's garbage token could displace a
+    live token from an expert queue; the mask excludes dead rows from
+    dispatch (`moe._route`). Dense layers ignore it (rows independent).
 
     Stacked-layer caches ride in the scan CARRY and are updated in place
     with dynamic_update_index (aliasable through the while loop). Passing
@@ -692,7 +745,8 @@ def forward_decode(cfg: ArchConfig, params, token, state: ServeState):
                 y, nc, _, _ = _apply_layer(
                     cfg, ls, lp[f"l{i}"], y, positions, mode="decode",
                     cache=lc[f"l{i}"], pos=state.pos,
-                    cross_kv=lx[f"l{i}"] if lx is not None else None)
+                    cross_kv=lx[f"l{i}"] if lx is not None else None,
+                    block_table=block_tables, token_mask=token_mask)
                 ncs[f"l{i}"] = nc
             return y, ncs
 

@@ -1,0 +1,352 @@
+"""Load-harness battery (DESIGN §13): scenario schema validation accepts
+every golden spec and rejects each defect class with a named complaint,
+the workload builder honours the arrival process, SLO evaluation treats
+unmeasured metrics as misses, one real scenario run emits a schema-valid
+BENCH_serve.json whose paged occupancy beats the contiguous reservation,
+and `scripts/diff_serve.py` gates exactly the regression classes it
+documents."""
+import copy
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch import loadgen
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "scenarios"
+
+_spec = importlib.util.spec_from_file_location(
+    "diff_serve",
+    pathlib.Path(__file__).parent.parent / "scripts" / "diff_serve.py")
+diff_serve = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(diff_serve)
+
+needs_yaml = pytest.mark.skipif(loadgen.yaml is None,
+                                reason="pyyaml not installed")
+
+BASE = {
+    "schema": "scenario/v1",
+    "name": "t",
+    "arch": "llama3p2_3b",
+    "engine": {"slots": 2, "max_len": 32, "paged": True, "block_size": 8},
+    "workload": {"requests": 2, "seed": 0,
+                 "arrival": {"process": "poisson", "rate": 8.0},
+                 "prompt_lens": [4, 8], "gen_lens": [2, 4]},
+    "slo": {"p99_latency_s": 10.0},
+}
+
+
+def _mutated(path, value):
+    """Deep-copied BASE with spec[path[0]][path[1]]... set to `value`
+    (DELETE sentinel removes the key)."""
+    spec = copy.deepcopy(BASE)
+    node = spec
+    for k in path[:-1]:
+        node = node[k]
+    if value is _DELETE:
+        del node[path[-1]]
+    else:
+        node[path[-1]] = value
+    return spec
+
+
+_DELETE = object()
+
+
+# ---------------------------------------------------------------------------
+# Scenario validation
+# ---------------------------------------------------------------------------
+
+
+def test_base_spec_is_valid():
+    assert loadgen.validate_scenario(BASE) == []
+
+
+@needs_yaml
+def test_all_golden_scenarios_validate():
+    files = loadgen.scenario_files(GOLDEN)
+    assert len(files) >= 4, f"golden scenario set shrank: {files}"
+    names = set()
+    for p in files:
+        spec = loadgen.load_scenario(p)     # raises on any defect
+        names.add(spec["name"])
+    assert len(names) == len(files), "scenario names must be unique"
+    # the suite covers both layouts and both arrival processes
+    specs = [loadgen.load_scenario(p) for p in files]
+    assert {s["engine"].get("paged", False) for s in specs} == {True, False}
+    assert {s["workload"]["arrival"]["process"] for s in specs} \
+        == {"poisson", "uniform"}
+
+
+@pytest.mark.parametrize("path,value,complaint", [
+    (("schema",), "scenario/v0", "schema"),
+    (("name",), _DELETE, "name"),
+    (("arch",), "not_an_arch", "arch"),
+    (("engine", "slots"), 0, "engine.slots"),
+    (("engine", "max_len"), "long", "engine.max_len"),
+    (("engine", "paged"), "yes", "engine.paged"),
+    (("engine", "max_len"), 30, "not a multiple"),
+    (("engine", "num_blocks"), 1, "engine.num_blocks"),
+    (("engine", "bucket"), "pow4", "engine.bucket"),
+    (("engine", "mystery"), 1, "unknown keys"),
+    (("workload", "requests"), 0, "workload.requests"),
+    (("workload", "seed"), 1.5, "workload.seed"),
+    (("workload", "arrival", "process"), "burst", "arrival.process"),
+    (("workload", "arrival", "rate"), 0, "arrival.rate"),
+    (("workload", "prompt_lens"), [], "prompt_lens"),
+    (("workload", "gen_lens"), [4, 0], "gen_lens"),
+    (("workload", "gen_lens"), [40], "cache rows"),
+    (("slo", "p42_latency_s"), 1.0, "unknown target"),
+    (("slo", "p99_latency_s"), -1.0, "slo.p99_latency_s"),
+])
+def test_validate_rejects_each_defect_class(path, value, complaint):
+    defects = loadgen.validate_scenario(_mutated(path, value))
+    assert defects, f"{path}={value!r} accepted"
+    assert any(complaint in d for d in defects), \
+        f"no defect mentions {complaint!r}: {defects}"
+
+
+def test_validate_reports_all_defects_at_once():
+    spec = _mutated(("engine", "slots"), 0)
+    spec["workload"]["requests"] = 0
+    spec["slo"]["p99_latency_s"] = -1
+    defects = loadgen.validate_scenario(spec)
+    assert len(defects) >= 3, defects
+
+
+def test_validate_non_mapping():
+    assert loadgen.validate_scenario([1, 2]) == \
+        ["spec must be a mapping, got list"]
+
+
+def test_prefill_batch_requires_paged():
+    spec = _mutated(("engine", "paged"), False)
+    spec["engine"]["prefill_batch"] = 2
+    assert any("requires engine.paged" in d
+               for d in loadgen.validate_scenario(spec))
+
+
+def test_json_specs_load_without_yaml(tmp_path, monkeypatch):
+    """.json scenarios must keep working in containers without pyyaml;
+    .yaml must fail loudly there, not silently mis-parse."""
+    p = tmp_path / "s.json"
+    p.write_text(json.dumps(BASE))
+    monkeypatch.setattr(loadgen, "yaml", None)
+    assert loadgen.load_scenario(p)["name"] == "t"
+    y = tmp_path / "s.yaml"
+    y.write_text("schema: scenario/v1\n")
+    with pytest.raises(RuntimeError, match="pyyaml"):
+        loadgen.load_scenario(y)
+
+
+def test_load_scenario_raises_listing_defects(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(_mutated(("engine", "slots"), 0)))
+    with pytest.raises(ValueError, match="engine.slots"):
+        loadgen.load_scenario(p)
+
+
+# ---------------------------------------------------------------------------
+# Workload construction + SLO evaluation
+# ---------------------------------------------------------------------------
+
+
+def test_build_requests_arrival_processes():
+    cfg = get_config("llama3p2_3b", smoke=True)
+    uni = loadgen.build_requests(cfg, _mutated(
+        ("workload", "arrival", "process"), "uniform"))
+    assert [r.arrival for r in uni] == [1 / 8.0, 2 / 8.0]
+    poi = loadgen.build_requests(cfg, BASE)
+    assert all(r.arrival > 0 for r in poi)
+    assert [r.arrival for r in poi] == sorted(r.arrival for r in poi)
+    for r in uni + poi:
+        assert r.prompt_len in BASE["workload"]["prompt_lens"]
+        assert r.max_new in BASE["workload"]["gen_lens"]
+    # same seed -> identical mix regardless of arrival process
+    assert [r.prompt_len for r in uni] == [r.prompt_len for r in poi]
+
+
+def test_evaluate_slo_directions_and_missing():
+    row = {"latency_p99_s": 2.0, "tok_per_s": 5.0, "latency_mean_s": None}
+    out = loadgen.evaluate_slo(
+        {"p99_latency_s": 3.0, "min_tok_per_s": 6.0,
+         "mean_latency_s": 1.0}, row)
+    assert out["p99_latency_s"]["pass"] is True
+    assert out["min_tok_per_s"]["pass"] is False, "min direction inverted"
+    assert out["mean_latency_s"]["pass"] is False, \
+        "an unmeasured SLO must fail, not vacuously pass"
+    assert out["p99_latency_s"] == {"target": 3.0, "measured": 2.0,
+                                    "pass": True}
+
+
+# ---------------------------------------------------------------------------
+# BENCH_serve.json check()
+# ---------------------------------------------------------------------------
+
+
+def _row(paged=False):
+    return {
+        "scenario": "s_paged" if paged else "s_cont",
+        "arch": "llama3p2_3b", "slots": 2, "max_len": 32,
+        "paged": paged, "block_size": 8 if paged else None,
+        "num_blocks": 9 if paged else None, "prefill_batch": 1,
+        "requests": 2, "tokens": 12, "tok_per_s": 3.0,
+        "latency_mean_s": 1.0, "latency_p50_s": 1.0, "latency_p99_s": 2.0,
+        "latency_max_s": 2.5, "queue_wait_mean_s": 0.1, "decode_steps": 6,
+        "peak_active": 2, "peak_blocks": 5 if paged else None,
+        "peak_cache_rows": 40 if paged else 64,
+        "reserved_rows_contiguous": 64,
+        "slo": {"p99_latency_s":
+                {"target": 10.0, "measured": 2.0, "pass": True}},
+        "slo_pass": True, "platform": "cpu",
+    }
+
+
+def _write(tmp_path, doc, name="b.json"):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_check_accepts_wellformed(tmp_path):
+    doc = {"schema": "bench_serve/v1", "rows": [_row(False), _row(True)]}
+    assert loadgen.check(_write(tmp_path, doc)) == 0
+
+
+@pytest.mark.parametrize("corrupt", [
+    lambda d: d.update(schema="bench/v1"),
+    lambda d: d.update(rows=[]),
+    lambda d: d["rows"][0].pop("latency_p99_s"),
+    lambda d: d["rows"][0].update(slo_pass="yes"),
+    lambda d: d["rows"][0].update(platform=""),
+    lambda d: d["rows"][0].update(reserved_rows_contiguous=63),
+    lambda d: d["rows"][0].update(block_size=8),        # contiguous+paged
+    lambda d: d["rows"][1].update(peak_cache_rows=41),  # != blocks*size
+    lambda d: d["rows"][1].update(peak_blocks=None),
+    lambda d: d["rows"][0].update(slo={"p99_latency_s": {"target": 1.0}}),
+    lambda d: d["rows"][0].update(latency_p99_s=None),  # with requests>0
+])
+def test_check_rejects_each_corruption(tmp_path, corrupt):
+    doc = {"schema": "bench_serve/v1", "rows": [_row(False), _row(True)]}
+    corrupt(doc)
+    assert loadgen.check(_write(tmp_path, doc)) == 1
+
+
+def test_check_unreadable(tmp_path):
+    p = tmp_path / "junk.json"
+    p.write_text("{nope")
+    assert loadgen.check(str(p)) == 1
+    assert loadgen.check(str(tmp_path / "absent.json")) == 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the acceptance scenario
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def paged_mixed_row(tmp_path_factory):
+    if loadgen.yaml is None:
+        pytest.skip("pyyaml not installed")
+    spec = loadgen.load_scenario(GOLDEN / "paged_mixed.yaml")
+    row = loadgen.run_scenario(spec, smoke=True, verbose=False)
+    return spec, row
+
+
+def test_paged_mixed_emits_valid_bench_row(paged_mixed_row, tmp_path):
+    spec, row = paged_mixed_row
+    doc = {"schema": "bench_serve/v1", "rows": [row]}
+    out = tmp_path / "BENCH_serve.json"
+    out.write_text(json.dumps(doc))
+    assert loadgen.check(str(out)) == 0
+    assert row["requests"] == spec["workload"]["requests"]
+    assert set(row) == set(loadgen.ROW_KEYS)
+
+
+def test_paged_mixed_beats_contiguous_reservation(paged_mixed_row):
+    """THE acceptance inequality: on the mixed-length scenario the paged
+    engine's touched-block footprint must be strictly below what a
+    contiguous engine pins up front (slots x max_len)."""
+    _, row = paged_mixed_row
+    assert row["paged"] is True
+    assert row["peak_cache_rows"] == row["peak_blocks"] * row["block_size"]
+    assert row["peak_cache_rows"] < row["reserved_rows_contiguous"], (
+        f"paging saved nothing: peak {row['peak_cache_rows']} rows vs "
+        f"{row['reserved_rows_contiguous']} reserved")
+    assert row["slo_pass"] is True, row["slo"]
+
+
+# ---------------------------------------------------------------------------
+# scripts/diff_serve.py
+# ---------------------------------------------------------------------------
+
+
+def _bench(p99=2.0, rows_peak=40, slo=True, name="s_paged"):
+    row = _row(True)
+    row.update(scenario=name, latency_p99_s=p99, peak_cache_rows=rows_peak,
+               slo_pass=slo)
+    if not slo:
+        row["slo"]["p99_latency_s"]["pass"] = False
+    return {"schema": "bench_serve/v1", "rows": [row]}
+
+
+def test_diff_serve_ok_and_quantile_regression():
+    ok = diff_serve.compare(_bench(2.0), _bench(2.0), tol=0.5, slack=0.1)
+    assert all(r["status"] == "ok" for r in ok)
+    # 2.0 -> 3.2 > 2.0*1.5+0.1
+    bad = diff_serve.compare(_bench(3.2), _bench(2.0), tol=0.5, slack=0.1)
+    assert [r["metric"] for r in bad if r["status"] == "regression"] \
+        == ["latency_p99_s"]
+    # slack absorbs small absolute growth on tiny baselines
+    near = diff_serve.compare(_bench(3.09), _bench(2.0), tol=0.5, slack=0.1)
+    assert all(r["status"] == "ok" for r in near)
+
+
+def test_diff_serve_paged_occupancy_gate_has_no_tolerance():
+    bad = diff_serve.compare(_bench(rows_peak=48), _bench(rows_peak=40),
+                             tol=0.5, slack=0.1)
+    reg = [r for r in bad if r["status"] == "regression"]
+    assert [r["metric"] for r in reg] == ["peak_cache_rows"]
+    ok = diff_serve.compare(_bench(rows_peak=32), _bench(rows_peak=40),
+                            tol=0.5, slack=0.1)
+    assert all(r["status"] == "ok" for r in ok), "shrinking is fine"
+
+
+def test_diff_serve_slo_flip_and_new_vanished():
+    flip = diff_serve.compare(_bench(slo=False), _bench(slo=True),
+                              tol=0.5, slack=0.1)
+    reg = [r for r in flip if r["status"] == "regression"]
+    assert [r["metric"] for r in reg] == ["slo_pass"]
+    assert reg[0]["missed"] == ["p99_latency_s"]
+    # fail -> fail is not a *new* regression
+    still = diff_serve.compare(_bench(slo=False), _bench(slo=False),
+                               tol=0.5, slack=0.1)
+    assert not [r for r in still if r["status"] == "regression"]
+    both = diff_serve.compare(_bench(name="b"), _bench(name="a"),
+                              tol=0.5, slack=0.1)
+    assert {(r["scenario"], r["status"]) for r in both} == \
+        {("b", "new"), ("a", "vanished")}
+
+
+def test_diff_serve_main_and_markdown(tmp_path):
+    new = tmp_path / "new"
+    prev = tmp_path / "prev"
+    new.mkdir()
+    prev.mkdir()
+    (new / "BENCH_serve.json").write_text(json.dumps(_bench(3.2)))
+    md = tmp_path / "summary.md"
+    # no previous snapshot: gate skips, exit 0, note in the summary
+    assert diff_serve.main([str(new), str(prev),
+                            "--md-out", str(md)]) == 0
+    assert "skipped" in md.read_text()
+    # regression: exit 1, ❌ row in the markdown table
+    (prev / "BENCH_serve.json").write_text(json.dumps(_bench(2.0)))
+    assert diff_serve.main([str(new), str(prev),
+                            "--md-out", str(md)]) == 1
+    text = md.read_text()
+    assert "latency_p99_s" in text and "regression" in text
+    # recovery: exit 0 once the fresh run is back inside the envelope
+    (new / "BENCH_serve.json").write_text(json.dumps(_bench(2.0)))
+    assert diff_serve.main([str(new), str(prev)]) == 0

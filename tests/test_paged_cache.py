@@ -1,0 +1,356 @@
+"""Differential battery for the paged KV serve path (DESIGN §13).
+
+Three layers of proof that block-granular paging is a pure layout change:
+
+1. cache-level oracles — paged write/gather must be BIT-identical to the
+   contiguous write/read it replaces, including the int8 dequant order;
+2. `BlockAllocator` safety — unit pins plus a hypothesis-driven random
+   alloc/free interleaving against a model allocator: never leaks, never
+   double-assigns, never circulates the null block;
+3. engine-vs-engine — a paged `Engine` must reproduce the contiguous
+   engine token-for-token across all four cache families (GQA, MLA+MoE,
+   SSM, recurrent hybrid), under block backpressure (a pool smaller than
+   slots×worst-case), under batched multi-slot prefill, and over
+   hypothesis-driven prompt/gen mixes — all without recompiling after
+   warmup.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # minimal containers: seeded deterministic shim
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.launch.scheduler import Engine
+from repro.models import kvcache, transformer
+
+MAX_LEN = 48
+BLOCK = 8
+
+# family -> arch exercising it (all smoke-sized): full-width GQA pages,
+# MLA pages (and rides the MoE token-mask fix), SSM and the recurrent
+# hybrid stay contiguous under paged=True (O(1)/O(window) state).
+FAMILY_ARCHS = {
+    "gqa": "llama3p2_3b",
+    "mla_moe": "deepseek_v2_lite_16b",
+    "ssm": "mamba2_2p7b",
+    "recurrent": "recurrentgemma_2b",
+}
+
+_MODELS = {}
+
+
+def _model(arch):
+    if arch not in _MODELS:
+        cfg = get_config(arch, smoke=True)
+        _MODELS[arch] = (cfg,
+                         transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    return _MODELS[arch]
+
+
+def _prompts(cfg, shapes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(p,), dtype=np.int32)
+            for p in shapes]
+
+
+def _drain_tokens(eng, prompts, gens):
+    """Submit-all then drain; tokens keyed by rid so admission order
+    (which legitimately differs under block backpressure) can't alias."""
+    rids = [eng.submit(t, max_new=g) for t, g in zip(prompts, gens)]
+    done = {r.rid: list(r.tokens) for r in eng.drain()}
+    return [done[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# 1. Cache-level oracles: paged == contiguous, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _fill_both(dtype, seed=0):
+    """Write the same T random entries through the contiguous decode-write
+    path and the paged one; return (contiguous cache, paged cache, table)."""
+    b, hkv, w, hd, bs = 2, 3, 16, 4, 4
+    mb = w // bs
+    rng = np.random.default_rng(seed)
+    cont = kvcache.init_attn_cache(b, hkv, w, hd, dtype=dtype)
+    paged = kvcache.init_paged_attn_cache(hkv, 1 + b * mb, bs, hd,
+                                          dtype=dtype)
+    # slot 0 -> blocks 1..4, slot 1 -> blocks 5..8 (block 0 stays null)
+    table = np.arange(1, 1 + b * mb, dtype=np.int32).reshape(b, mb)
+    for pos in range(w):
+        k = jnp.asarray(rng.standard_normal((b, hkv, 1, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, hkv, 1, hd)), jnp.float32)
+        slot = jnp.full((b,), pos, jnp.int32)
+        cont = kvcache.cache_write_at(cont, k, v, slot)
+        blk = jnp.asarray(table[:, pos // bs])
+        off = jnp.full((b,), pos % bs, jnp.int32)
+        paged = kvcache.paged_cache_write_at(paged, k, v, blk, off)
+    return cont, paged, jnp.asarray(table)
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_paged_write_gather_matches_contiguous(dtype):
+    """paged_cache_write_at + paged_gather == cache_write_at + cache_read,
+    bitwise — including the int8 quantise/dequantise round trip (scales
+    are per-entry, so block scatter must not reorder them)."""
+    cont, paged, table = _fill_both(dtype)
+    k_ref, v_ref = kvcache.cache_read(cont)
+    k_got, v_got = kvcache.paged_gather(paged, table)
+    np.testing.assert_array_equal(np.asarray(k_got), np.asarray(k_ref))
+    np.testing.assert_array_equal(np.asarray(v_got), np.asarray(v_ref))
+
+
+def test_paged_mla_write_gather_matches_contiguous():
+    b, w, r, rd, bs = 2, 16, 6, 4, 4
+    mb = w // bs
+    rng = np.random.default_rng(1)
+    cont = kvcache.init_mla_cache(b, w, r, rd)
+    paged = kvcache.init_paged_mla_cache(1 + b * mb, bs, r, rd)
+    table = np.arange(1, 1 + b * mb, dtype=np.int32).reshape(b, mb)
+    for pos in range(w):
+        ckv = jnp.asarray(rng.standard_normal((b, 1, r)), jnp.float32)
+        kr = jnp.asarray(rng.standard_normal((b, 1, rd)), jnp.float32)
+        cont = kvcache.mla_cache_write_at(
+            cont, ckv, kr, jnp.full((b,), pos, jnp.int32))
+        paged = kvcache.mla_paged_cache_write_at(
+            paged, ckv, kr, jnp.asarray(table[:, pos // bs]),
+            jnp.full((b,), pos % bs, jnp.int32))
+    ckv_got, kr_got = kvcache.mla_paged_gather(paged, jnp.asarray(table))
+    np.testing.assert_array_equal(np.asarray(ckv_got),
+                                  np.asarray(cont.ckv.astype(jnp.float32)))
+    np.testing.assert_array_equal(np.asarray(kr_got),
+                                  np.asarray(cont.krope.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_paged_scatter_prefill_matches_contiguous(dtype):
+    """Scattering a batch-1 prefilled contiguous cache into table blocks
+    then gathering reproduces the original read exactly."""
+    hkv, w, hd, bs = 3, 16, 4, 4
+    mb = w // bs
+    rng = np.random.default_rng(2)
+    one = kvcache.init_attn_cache(1, hkv, w, hd, dtype=dtype)
+    one = kvcache.cache_write(
+        one,
+        jnp.asarray(rng.standard_normal((1, hkv, w, hd)), jnp.float32),
+        jnp.asarray(rng.standard_normal((1, hkv, w, hd)), jnp.float32),
+        jnp.arange(w, dtype=jnp.int32))
+    pool = kvcache.init_paged_attn_cache(hkv, 1 + mb, bs, hd, dtype=dtype)
+    table = jnp.arange(1, 1 + mb, dtype=jnp.int32)
+    pool = kvcache.paged_scatter_attn(pool, one, table)
+    k_ref, v_ref = kvcache.cache_read(one)
+    k_got, v_got = kvcache.paged_gather(pool, table[None])
+    np.testing.assert_array_equal(np.asarray(k_got), np.asarray(k_ref))
+    np.testing.assert_array_equal(np.asarray(v_got), np.asarray(v_ref))
+
+
+def test_null_block_absorbs_masked_writes():
+    """A slot carrying the all-null table writes into block 0 only: live
+    blocks are untouched, and the victim's gather still matches."""
+    cont, paged, table = _fill_both("bf16", seed=3)
+    b, hkv, hd = 2, 3, 4
+    garbage_k = jnp.full((b, hkv, 1, hd), 7.0, jnp.float32)
+    null_blk = jnp.zeros((b,), jnp.int32)
+    hit = kvcache.paged_cache_write_at(paged, garbage_k, garbage_k,
+                                       null_blk, jnp.zeros((b,), jnp.int32))
+    k_ref, v_ref = kvcache.paged_gather(paged, table)
+    k_got, v_got = kvcache.paged_gather(hit, table)
+    np.testing.assert_array_equal(np.asarray(k_got), np.asarray(k_ref))
+    np.testing.assert_array_equal(np.asarray(v_got), np.asarray(v_ref))
+    # ... and the garbage really did land in block 0
+    assert np.any(np.asarray(hit.k[:, 0]) == 7.0)
+
+
+# ---------------------------------------------------------------------------
+# 2. BlockAllocator: unit pins + hypothesis stress
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_basics():
+    a = kvcache.BlockAllocator(6)
+    assert a.free_blocks == 5 and a.used == 0
+    got = a.alloc(3)
+    assert got == [1, 2, 3], "ascending, deterministic, never block 0"
+    assert a.used == 3 and a.peak == 3
+    assert a.alloc(3) is None, "shortage -> None, not partial"
+    assert a.used == 3 and a.free_blocks == 2, "failed alloc changed state"
+    a.free([2])
+    assert a.alloc(3) == [2, 4, 5], "freed block is recycled first (LIFO)"
+    a.check()
+
+
+def test_allocator_rejects_misuse():
+    with pytest.raises(ValueError, match="num_blocks"):
+        kvcache.BlockAllocator(1)
+    a = kvcache.BlockAllocator(4)
+    with pytest.raises(ValueError, match="n >= 1"):
+        a.alloc(0)
+    blocks = a.alloc(2)
+    a.free(blocks)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(blocks)              # second free of the same ids
+    with pytest.raises(ValueError, match="foreign"):
+        a.free([0])                 # the null block was never issued
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(min_value=2, max_value=32),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_allocator_random_interleaving(num_blocks, seed):
+    """Random alloc/free traffic against a model: every issued id is
+    fresh (not live, not 0), frees return exactly what was handed out,
+    and the free/live partition reconciles after every single op."""
+    rng = np.random.default_rng(seed)
+    a = kvcache.BlockAllocator(num_blocks)
+    live = []                      # list of allocated groups (model)
+    issued = set()
+    for _ in range(60):
+        if live and (rng.integers(2) == 0 or a.free_blocks == 0):
+            grp = live.pop(rng.integers(len(live)))
+            a.free(grp)
+            issued.difference_update(grp)
+        else:
+            n = int(rng.integers(1, num_blocks))
+            got = a.alloc(n)
+            if n > num_blocks - 1 - len(issued):
+                assert got is None, "oversubscribed alloc must fail"
+            else:
+                assert got is not None and len(got) == n
+                assert 0 not in got, "null block entered circulation"
+                assert not (set(got) & issued), "double-assigned block"
+                assert len(set(got)) == n
+                issued.update(got)
+                live.append(got)
+        assert a.used == len(issued)
+        a.check()
+    for grp in live:
+        a.free(grp)
+    a.check()
+    assert a.used == 0 and a.free_blocks == num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# 3. Engine vs engine: paged must be invisible in the tokens
+# ---------------------------------------------------------------------------
+
+# mixed lengths that cross block boundaries (6 < 8, 12 crosses one, 40
+# spans five, 9 straddles) with mid-decode admission through 2 slots
+SHAPES = [(6, 4), (12, 8), (40, 8), (9, 8)]
+
+
+def _paired_run(arch, shapes, seed=0, **paged_kw):
+    cfg, params = _model(arch)
+    prompts = _prompts(cfg, [p for p, _ in shapes], seed=seed)
+    gens = [g for _, g in shapes]
+    ref = _drain_tokens(Engine(cfg, params, slots=2, max_len=MAX_LEN),
+                        prompts, gens)
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN, paged=True,
+                 block_size=BLOCK, **paged_kw)
+    got = _drain_tokens(eng, prompts, gens)
+    assert [len(t) for t in got] == gens
+    assert got == ref, f"paged {arch} diverged from contiguous"
+    return eng
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_paged_engine_parity_all_families(family):
+    """Token-for-token parity, paged vs contiguous, per cache family.
+    For SSM/recurrent the paged pools don't exist (states are O(1) per
+    slot) — paged=True must still be a behavioural no-op."""
+    eng = _paired_run(FAMILY_ARCHS[family], SHAPES)
+    # drained engine returned every block; accounting reconciles
+    assert eng.allocator.used == 0
+    eng.allocator.check()
+    assert eng.stats()["peak_blocks"] <= eng.num_blocks - 1
+
+
+def test_paged_parity_under_block_backpressure():
+    """A pool far below slots x worst-case (13 blocks vs 2x6+1) forces
+    admission to wait on freed blocks: requests queue, nothing drops,
+    tokens still match contiguous exactly."""
+    eng = _paired_run(FAMILY_ARCHS["gqa"], SHAPES, num_blocks=13)
+    assert eng.stats()["peak_blocks"] <= 12
+    assert eng.dropped == 0
+
+
+def test_paged_parity_with_batched_prefill():
+    """prefill_batch=3 admits same-bucket groups in one launch (dummy
+    rows alias slot 0's table then get overwritten by the real write);
+    output must be indistinguishable from one-at-a-time admission."""
+    cfg, params = _model(FAMILY_ARCHS["gqa"])
+    shapes = [(8, 4), (8, 6), (8, 5), (8, 3), (12, 4)]
+    prompts = _prompts(cfg, [p for p, _ in shapes], seed=4)
+    gens = [g for _, g in shapes]
+    ref = _drain_tokens(Engine(cfg, params, slots=3, max_len=MAX_LEN),
+                        prompts, gens)
+    eng = Engine(cfg, params, slots=3, max_len=MAX_LEN, paged=True,
+                 block_size=BLOCK, prefill_batch=3)
+    assert _drain_tokens(eng, prompts, gens) == ref
+
+
+def test_paged_engine_never_recompiles_after_warmup():
+    """The block tables ride along as a fixed-shape (slots, max_blocks)
+    operand, so a warmed paged engine must trace decode exactly once —
+    same invariant the contiguous engine pins in test_scheduler."""
+    cfg, params = _model(FAMILY_ARCHS["gqa"])
+    eng = Engine(cfg, params, slots=2, max_len=MAX_LEN, paged=True,
+                 block_size=BLOCK)
+    prompts = _prompts(cfg, [8, 16], seed=5)       # warmup: both buckets
+    for toks in prompts:
+        eng.submit(toks, max_new=2)
+    eng.drain()
+    warm = dict(eng.trace_counts)
+    assert warm["decode"] == 1
+
+    shapes = [(8, 5), (16, 9), (8, 3), (16, 7), (8, 11)]
+    for toks, (_, gen) in zip(_prompts(cfg, [p for p, _ in shapes], seed=6),
+                              shapes):
+        eng.submit(toks, max_new=gen)
+    eng.drain()
+    assert dict(eng.trace_counts) == warm, \
+        f"paged engine recompiled: {dict(eng.trace_counts)} != {warm}"
+
+
+def test_paged_engine_constructor_guards():
+    cfg, params = _model(FAMILY_ARCHS["gqa"])
+    with pytest.raises(ValueError, match="tiles exactly"):
+        Engine(cfg, params, slots=2, max_len=MAX_LEN, paged=True,
+               block_size=7)
+    with pytest.raises(ValueError, match="worst-case"):
+        # 6 blocks/slot + null block needs >= 7; 6 would deadlock empty
+        Engine(cfg, params, slots=2, max_len=MAX_LEN, paged=True,
+               block_size=BLOCK, num_blocks=6)
+    with pytest.raises(ValueError, match="prefill_batch"):
+        Engine(cfg, params, slots=2, max_len=MAX_LEN, prefill_batch=2)
+
+
+@pytest.fixture(scope="module")
+def llama_pair():
+    cfg, params = _model(FAMILY_ARCHS["gqa"])
+    cont = Engine(cfg, params, slots=2, max_len=MAX_LEN)
+    paged = Engine(cfg, params, slots=2, max_len=MAX_LEN, paged=True,
+                   block_size=BLOCK)
+    return cfg, cont, paged
+
+
+@settings(deadline=None, max_examples=5)
+@given(st.integers(min_value=1, max_value=20),
+       st.integers(min_value=1, max_value=20),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_paged_parity_hypothesis_mixes(llama_pair, p1, p2, gen, seed):
+    """Property form of the parity claim over random prompt/gen mixes,
+    reusing one warm engine pair so examples don't recompile decode."""
+    cfg, cont, paged = llama_pair
+    prompts = _prompts(cfg, [p1, p2], seed=seed % 1000)
+    gens = [gen, max(1, 9 - gen)]
+    assert _drain_tokens(paged, prompts, gens) == \
+        _drain_tokens(cont, prompts, gens)

@@ -184,6 +184,37 @@ def test_request_validation(smoke):
         eng.submit(np.zeros(4, np.int32), max_new=0)
 
 
+def test_bucketed_submit_charges_real_length_not_padded(smoke):
+    """Regression: submit() used to charge the pow2-PADDED prompt length
+    against the decode budget, rejecting requests that actually fit.
+    Decode overwrites the pad tail (write pos starts at the real length),
+    so the true constraint is real prompt + max_new; the padded bucket
+    only has to fit the cache width on its own. Both sides pinned:
+
+    * plen=9/max_new=8 at max_len=20: real need 17 fits, bucket 16 fits
+      — must ADMIT (old code rejected: 16 + 8 = 24 > 20) and match the
+      synchronous path token-for-token;
+    * plen=17/max_new=2: real need 19 fits but the 32-bucket itself
+      overflows the cache — reject with the bucket-specific message;
+    * plen=10/max_new=15: real need 25 > 20 — the plain cache-rows
+      rejection, independent of bucketing.
+    """
+    cfg, params = smoke
+    eng = Engine(cfg, params, slots=2, max_len=20, bucket="pow2")
+
+    toks = _prompts(cfg, [9], seed=12)[0]
+    eng.submit(toks, max_new=8)                 # old code: ValueError here
+    res = eng.drain()[0]
+    ref = np.asarray(serve_mod.serve(cfg, params, jnp.asarray(toks)[None],
+                                     max_len=20, gen=8))[0]
+    np.testing.assert_array_equal(np.array(res.tokens), ref)
+
+    with pytest.raises(ValueError, match="bucket"):
+        eng.submit(np.zeros(17, np.int32), max_new=2)
+    with pytest.raises(ValueError, match="cache rows"):
+        eng.submit(np.zeros(10, np.int32), max_new=15)
+
+
 def test_patch_tokens_count_against_cache_budget():
     """Vision patch tokens prepend to the decoder sequence, so they occupy
     ring-buffer rows ahead of the prompt: a request that would fit without
@@ -239,6 +270,17 @@ def test_engine_specs_resolve_on_production_mesh(smoke):
         cfg, 16, 4, make_host_mesh(), sh.SERVE_RULES)
     assert set(host) == set(inspecs)
 
+    # paged engine inputs (block tables, batched prefill rows) resolve too
+    paged = specs.engine_input_specs(cfg, 16, 4, paged=True, block_size=8,
+                                     prefill_batch=2, max_len=32)
+    assert set(paged) >= {"tokens", "lengths", "slots", "table_rows",
+                          "block_tables"}
+    assert paged["tokens"].shape == (2, 16)
+    assert paged["block_tables"].shape == (4, 4)
+    for k, v in paged.items():
+        sh.SERVE_RULES.resolve(specs.ENGINE_INPUT_LOGICAL[k], FakeMesh(),
+                               shape=v.shape)
+
 
 def test_serve_state_zeros_matches_prefill_structure(smoke):
     """The engine's zero-initialised state must be tree/shape/dtype
@@ -271,7 +313,22 @@ def test_engine_stats_empty_returns_full_schema(smoke):
         "latency_mean_s": None, "latency_p50_s": None,
         "latency_p99_s": None, "latency_max_s": None,
         "queue_wait_mean_s": None,
-        "decode_steps": 0, "peak_active": 0}
+        "decode_steps": 0, "peak_active": 0,
+        "paged": False, "block_size": None, "num_blocks": None,
+        "blocks_in_use": None, "peak_blocks": None}
+
+
+def test_engine_stats_empty_paged_schema(smoke):
+    """The paged engine's idle stats() carries the same stable schema
+    with live block-accounting fields instead of the None sentinels."""
+    cfg, params = smoke
+    eng = Engine(cfg, params, slots=2, max_len=16, paged=True,
+                 block_size=8)
+    st = eng.stats()
+    assert st["paged"] is True
+    assert st["block_size"] == 8 and st["num_blocks"] == 5
+    assert st["blocks_in_use"] == 0 and st["peak_blocks"] == 0
+    assert st["requests"] == 0 and st["latency_p99_s"] is None
 
 
 def test_engine_stats_count_zero_clock_completions(smoke):
